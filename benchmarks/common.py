@@ -1,0 +1,67 @@
+"""Shared benchmark utilities: measured-vs-roofline MSET cost probes."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cost_model import V5E
+from repro.mset import estimate, train
+from repro.tpss import TPSSParams, synthesize
+
+
+def time_call(fn, reps: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return float(np.mean(ts))
+
+
+def mset_training_flops_bytes(n_sig: int, n_mv: int, n_obs: int):
+    """Analytic FLOPs/bytes of MSET2 training (similarity + eigh + pinv)."""
+    f_sim = 2.0 * n_mv * n_mv * n_sig
+    f_eig = 10.0 * n_mv**3                 # eigh ~ O(10 m^3)
+    f_pinv = 2.0 * n_mv**3
+    flops = f_sim + f_eig + f_pinv
+    bytes_ = 4.0 * (n_obs * n_sig + 2 * n_mv * n_sig + 3 * n_mv * n_mv)
+    return flops, bytes_
+
+
+def mset_surveil_flops_bytes(n_sig: int, n_mv: int, n_obs: int):
+    """Analytic FLOPs/bytes of streaming surveillance over n_obs observations."""
+    f_sim = 2.0 * n_mv * n_obs * n_sig
+    f_w = 2.0 * n_mv * n_mv * n_obs
+    f_rec = 2.0 * n_mv * n_obs * n_sig
+    flops = f_sim + f_w + f_rec
+    bytes_ = 4.0 * (n_obs * n_sig * 3 + n_mv * n_sig + n_mv * n_mv + n_mv * n_obs)
+    return flops, bytes_
+
+
+def tpu_roofline_time(flops: float, bytes_: float, chips: int = 1) -> float:
+    return max(flops / (chips * V5E.peak_flops), bytes_ / (chips * V5E.hbm_bw))
+
+
+def measured_training(n_sig: int, n_mv: int, n_obs: int, reps: int = 2) -> float:
+    X = synthesize(jax.random.PRNGKey(n_sig * 131 + n_mv), TPSSParams(n_signals=n_sig, n_obs=n_obs))
+
+    def run():
+        m = train(X, n_memvec=n_mv)
+        return m.Ginv
+    return time_call(run, reps=reps)
+
+
+def measured_surveillance(n_sig: int, n_mv: int, n_obs: int, reps: int = 2) -> float:
+    key = jax.random.PRNGKey(n_sig * 17 + n_mv)
+    X = synthesize(key, TPSSParams(n_signals=n_sig, n_obs=max(n_mv * 2, 512)))
+    model = train(X, n_memvec=n_mv)
+    Xs = synthesize(jax.random.PRNGKey(1), TPSSParams(n_signals=n_sig, n_obs=n_obs))
+
+    def run():
+        return estimate(model, Xs)[1]
+    return time_call(run, reps=reps)

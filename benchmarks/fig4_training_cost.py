@@ -1,0 +1,47 @@
+"""Paper Figure 4: 3-D compute-cost contours of MSET2 TRAINING vs (n_memvec,
+n_observations, n_signals). Measured wall-clock (XLA:CPU), response surface per
+signal count, ASCII contour rendering."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import measured_training
+from repro.core import fit_response_surface, grid_to_matrix, render_ascii_surface
+from repro.core.scoping import CellResult
+
+
+def run(full: bool = False):
+    sigs = [10, 20, 30, 40] if full else [10, 20]
+    mvs = [128, 256, 512, 1024] if full else [64, 128, 256]
+    obs = [2048, 4096, 8192] if full else [1024, 2048]
+    rows = []
+    for ns in sigs:
+        for mv in mvs:
+            if mv < 2 * ns:
+                continue
+            for no in obs:
+                t = measured_training(ns, mv, no)
+                rows.append(CellResult(params={"n_signals": ns, "n_memvec": mv,
+                                               "n_observations": no}, mean_s=t))
+                print(f"fig4,train_cost,n_sig={ns},n_mv={mv},n_obs={no},"
+                      f"{t*1e6:.0f}us")
+    names, X, y = _arrays(rows)
+    surf = fit_response_surface(names, X, y)
+    print(f"# fig4 response surface r^2 = {surf.r2:.4f} "
+          f"(training cost ~ memvec^a * signals^b, paper: dominated by memvec+signals)")
+    sub = [r for r in rows if r.params["n_observations"] == obs[0]]
+    xs, ys, Z = grid_to_matrix(sub, "n_memvec", "n_signals")
+    print(render_ascii_surface(xs, ys, Z, "n_memvec", "n_signals",
+                               f"Fig4-style: training cost @ n_obs={obs[0]}"))
+    return rows, surf
+
+
+def _arrays(rows):
+    names = ["n_signals", "n_memvec", "n_observations"]
+    X = np.array([[r.params[n] for n in names] for r in rows], float)
+    y = np.array([r.mean_s for r in rows], float)
+    return names, X, y
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Paper Figure 5: 3-D compute-cost contours of MSET2 streaming SURVEILLANCE vs
+(n_memvec, n_observations, n_signals). Measured wall-clock + response surface."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import measured_surveillance
+from repro.core import fit_response_surface, grid_to_matrix, render_ascii_surface
+from repro.core.scoping import CellResult
+
+
+def run(full: bool = False):
+    sigs = [10, 20, 30, 40] if full else [10, 20]
+    mvs = [128, 256, 512] if full else [64, 128]
+    obs = [2048, 8192, 32768] if full else [1024, 4096]
+    rows = []
+    for ns in sigs:
+        for mv in mvs:
+            if mv < 2 * ns:
+                continue
+            for no in obs:
+                t = measured_surveillance(ns, mv, no)
+                rows.append(CellResult(params={"n_signals": ns, "n_memvec": mv,
+                                               "n_observations": no}, mean_s=t))
+                print(f"fig5,surveil_cost,n_sig={ns},n_mv={mv},n_obs={no},"
+                      f"{t*1e6:.0f}us")
+    names = ["n_signals", "n_memvec", "n_observations"]
+    X = np.array([[r.params[n] for n in names] for r in rows], float)
+    y = np.array([r.mean_s for r in rows], float)
+    surf = fit_response_surface(names, X, y)
+    print(f"# fig5 response surface r^2 = {surf.r2:.4f} "
+          f"(paper: surveillance cost dominated by observations+signals)")
+    sub = [r for r in rows if r.params["n_memvec"] == (128 if not full else 256)]
+    xs, ys, Z = grid_to_matrix(sub, "n_observations", "n_signals")
+    print(render_ascii_surface(xs, ys, Z, "n_observations", "n_signals",
+                               "Fig5-style: surveillance cost"))
+    return rows, surf
+
+
+if __name__ == "__main__":
+    run()

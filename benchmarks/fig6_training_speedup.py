@@ -1,0 +1,42 @@
+"""Paper Figure 6: training speedup surface vs (n_signals, n_memvec), with the
+MSET constraint n_memvec >= 2*n_signals (the paper's missing surface region).
+
+Paper: CPU vs CUDA-GPU measured. Here: XLA:CPU measured vs TPU-v5e roofline
+(analytic, 1 chip) — labelled 'roofline-derived' per DESIGN.md §3.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (measured_training, mset_training_flops_bytes,
+                               tpu_roofline_time)
+from repro.core import grid_to_matrix, render_ascii_surface
+from repro.core.scoping import CellResult
+
+
+def run(full: bool = False):
+    sigs = [32, 64, 128, 256, 512, 1024] if full else [32, 64, 128]
+    mvs = [128, 512, 2048, 8192] if full else [128, 256, 512]
+    rows = []
+    for ns in sigs:
+        for mv in mvs:
+            if mv < 2 * ns:
+                continue  # paper's training constraint -> missing surface region
+            t_cpu = measured_training(ns, mv, n_obs=max(2 * mv, 1024))
+            f, b = mset_training_flops_bytes(ns, mv, max(2 * mv, 1024))
+            t_tpu = tpu_roofline_time(f, b)
+            su = t_cpu / t_tpu
+            rows.append(CellResult(params={"n_signals": ns, "n_memvec": mv},
+                                   mean_s=su))
+            print(f"fig6,train_speedup,n_sig={ns},n_mv={mv},"
+                  f"cpu={t_cpu*1e3:.1f}ms,tpu_roofline={t_tpu*1e6:.1f}us,"
+                  f"speedup={su:.0f}x")
+    xs, ys, Z = grid_to_matrix(rows, "n_memvec", "n_signals")
+    print(render_ascii_surface(xs, ys, Z, "n_memvec", "n_signals",
+                               "Fig6-style: training speedup factor "
+                               "(measured CPU / TPU roofline); '·' = constraint"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Paper Figure 7: surveillance speedup vs (n_observations, n_memvec) at 64
+signals. Measured XLA:CPU vs TPU-v5e roofline."""
+from __future__ import annotations
+
+from benchmarks.common import (measured_surveillance, mset_surveil_flops_bytes,
+                               tpu_roofline_time)
+from repro.core import grid_to_matrix, render_ascii_surface
+from repro.core.scoping import CellResult
+
+N_SIGNALS = 64
+
+
+def run(full: bool = False, n_signals: int = N_SIGNALS):
+    mvs = [128, 512, 2048, 8192] if full else [128, 256, 512]
+    obs = [1024, 4096, 16384, 65536] if full else [1024, 4096]
+    rows = []
+    for mv in mvs:
+        if mv < 2 * n_signals:
+            continue
+        for no in obs:
+            t_cpu = measured_surveillance(n_signals, mv, no)
+            f, b = mset_surveil_flops_bytes(n_signals, mv, no)
+            t_tpu = tpu_roofline_time(f, b)
+            su = t_cpu / t_tpu
+            rows.append(CellResult(params={"n_memvec": mv, "n_observations": no},
+                                   mean_s=su))
+            print(f"fig7,surveil_speedup_{n_signals},n_mv={mv},n_obs={no},"
+                  f"cpu={t_cpu*1e3:.1f}ms,tpu_roofline={t_tpu*1e6:.1f}us,"
+                  f"speedup={su:.0f}x")
+    xs, ys, Z = grid_to_matrix(rows, "n_observations", "n_memvec")
+    print(render_ascii_surface(xs, ys, Z, "n_observations", "n_memvec",
+                               f"Fig7-style: surveillance speedup @ {n_signals} signals"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,14 @@
+"""Paper Figure 8: surveillance speedup at 1024 signals (the big-IoT use case —
+paper reports the speedup exceeding 9000x as use cases grow)."""
+from __future__ import annotations
+
+from benchmarks.fig7_surveillance_speedup_64 import run as run7
+
+
+def run(full: bool = False):
+    # full grids use n_memvec in 2^11..2^13 (paper Fig. 8); reduced uses smaller
+    return run7(full=full, n_signals=1024 if full else 256)
+
+
+if __name__ == "__main__":
+    run()

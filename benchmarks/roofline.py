@@ -1,0 +1,61 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline feedstock).
+
+Reads artifacts/dryrun/<mesh>/*.json and prints the per-cell three-term roofline,
+dominant bottleneck, MODEL_FLOPS ratio, and roofline fraction.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.core.report import fmt_si, fmt_time, markdown_table
+
+
+def load(mesh: str = "pod16x16", art_dir: str = "artifacts/dryrun"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(art_dir, mesh, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def table(mesh: str = "pod16x16", art_dir: str = "artifacts/dryrun") -> str:
+    recs = load(mesh, art_dir)
+    headers = ["arch", "shape", "t_comp", "t_mem", "t_coll", "t_step", "dominant",
+               "mem/dev", "useful", "roofline_frac"]
+    rows = []
+    for r in recs:
+        if r["status"] == "skip":
+            rows.append([r["arch"], r["shape"], "SKIP", "", "", "", r["reason"][:40],
+                         "", "", ""])
+            continue
+        if r["status"] == "error":
+            rows.append([r["arch"], r["shape"], "ERROR", "", "", "",
+                         r.get("error", "")[:40], "", "", ""])
+            continue
+        rows.append([
+            r["arch"], r["shape"],
+            fmt_time(r["t_compute"]), fmt_time(r["t_memory"]),
+            fmt_time(r["t_collective"]), fmt_time(r["t_step"]), r["dominant"],
+            f"{r['peak_memory_per_device']/2**30:.2f}GiB",
+            f"{r['useful_flops_ratio']:.3f}" if r.get("useful_flops_ratio") else "—",
+            f"{r['roofline_fraction']*100:.1f}%" if r.get("roofline_fraction") else "—",
+        ])
+    return markdown_table(headers, rows)
+
+
+def csv(mesh: str = "pod16x16", art_dir: str = "artifacts/dryrun"):
+    lines = []
+    for r in load(mesh, art_dir):
+        if r["status"] != "ok":
+            lines.append(f"roofline,{r['arch']}__{r['shape']},0,{r['status']}")
+            continue
+        lines.append(f"roofline,{r['arch']}__{r['shape']},"
+                     f"{r['t_step']*1e6:.0f},dom={r['dominant']};"
+                     f"frac={(r.get('roofline_fraction') or 0)*100:.1f}%")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(table())

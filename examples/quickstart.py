@@ -1,0 +1,55 @@
+"""Quickstart: the paper's prognostic pipeline end to end on one box.
+
+TPSS-synthesized telemetry -> MSET2 training -> streaming surveillance ->
+SPRT anomaly alarming, for a simulated pump with an incipient bearing drift.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.mset import SPRTParams, estimate, sprt, train
+from repro.tpss import TPSSParams, inject_anomaly, synthesize
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    print("=== 1. synthesize 24 sensors x 8192 observations (TPSS) ===")
+    p = TPSSParams(n_signals=24, n_obs=8192, ar1=0.88, cross_weight=0.5)
+    X = synthesize(key, p)
+    print(f"telemetry: {X.shape}, per-signal std ~ {float(jnp.std(X, 0).mean()):.2f}")
+
+    X_train, X_val, X_live = X[:5120], X[5120:6144], X[6144:]
+
+    print("\n=== 2. train MSET2 (memory vectors + similarity + pinv) ===")
+    model = train(X_train, n_memvec=256)
+    _, res_val = estimate(model, X_val)
+    sigma, mu = jnp.std(res_val, 0), jnp.mean(res_val, 0)
+    acc = float(jnp.sqrt(jnp.mean(res_val**2)) / jnp.std(X_val))
+    print(f"memory matrix D: {model.D.shape}, gamma={model.gamma:.3f}, "
+          f"residual/signal ratio: {acc:.3%}")
+
+    print("\n=== 3. live surveillance with an injected incipient fault ===")
+    t_fault, sig_fault = 600, 7
+    X_live = inject_anomaly(X_live, start=t_fault, signal=sig_fault,
+                            drift_per_step=0.02)
+    _, res = estimate(model, X_live)
+
+    print("\n=== 4. SPRT alarming ===")
+    alarms, _, _ = sprt(res, sigma, SPRTParams(alpha=1e-4, beta=1e-4, m_shift=4.0),
+                        mu=mu)
+    a = np.asarray(alarms)
+    pre = a[:t_fault].mean()
+    post = np.argwhere(a[t_fault:, sig_fault]).ravel()
+    print(f"pre-fault alarm rate: {pre:.4%}")
+    if len(post):
+        drift_sigmas = 0.02 * post[0] / float(sigma[sig_fault])
+        print(f"FAULT DETECTED on sensor {sig_fault}: {post[0]} samples after "
+              f"onset (drift magnitude at detection ~{drift_sigmas:.1f} residual sigmas)")
+    else:
+        print("fault missed (unexpected)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+from repro.configs.base import (
+    ArchConfig,
+    SHAPES,
+    ShapeSpec,
+    input_specs,
+    model_flops,
+    shape_applicable,
+)
+from repro.configs.registry import ARCH_IDS, all_cells, get_config
+
+__all__ = [
+    "ArchConfig", "SHAPES", "ShapeSpec", "input_specs", "model_flops",
+    "shape_applicable", "ARCH_IDS", "all_cells", "get_config",
+]

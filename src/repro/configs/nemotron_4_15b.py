@@ -1,0 +1,23 @@
+"""nemotron-4-15b — dense, GQA kv=8, squared-ReLU MLP. [arXiv:2402.16819]"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="nemotron-4-15b",
+    family="dense",
+    n_layers=32,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=256000,
+    mlp_type="relu2",
+    norm="layernorm",
+    pos_emb="rope",
+)
+
+SMOKE = CONFIG.replace(
+    name="nemotron-4-15b-smoke",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=256, vocab_size=512,
+)

@@ -1,0 +1,19 @@
+# ContainerStress — the paper's primary contribution: autonomous cloud-node
+# scoping via nested-loop Monte Carlo + compile-time roofline analysis.
+from repro.core.catalog import CATALOG, CloudShape, get_shape
+from repro.core.cost_model import (HardwareSpec, RooflineTerms, V5E, dollar_cost,
+                                   mfu, roofline)
+from repro.core.hlo_analysis import CompiledCost, analyze_compiled, parse_collectives
+from repro.core.recommender import Constraint, Recommendation, elasticity_plan, recommend
+from repro.core.scoping import CellResult, ContainerStress, ScopingResult
+from repro.core.surfaces import (ResponseSurface, fit_response_surface,
+                                 grid_to_matrix, render_ascii_surface)
+
+__all__ = [
+    "CATALOG", "CloudShape", "get_shape", "HardwareSpec", "RooflineTerms", "V5E",
+    "dollar_cost", "mfu", "roofline", "CompiledCost", "analyze_compiled",
+    "parse_collectives", "Constraint", "Recommendation", "elasticity_plan",
+    "recommend", "CellResult", "ContainerStress", "ScopingResult",
+    "ResponseSurface", "fit_response_surface", "grid_to_matrix",
+    "render_ascii_surface",
+]

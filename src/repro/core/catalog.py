@@ -1,0 +1,54 @@
+"""The cloud-'Shape' catalog (paper: CPU/GPU container shapes -> TPU v5e slices).
+
+Each shape is a mesh the scoping engine can compile against; multi-pod shapes add
+the ``pod`` axis crossed by DCI.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+
+from repro.core.cost_model import V5E, HardwareSpec
+
+
+@dataclass(frozen=True)
+class CloudShape:
+    name: str
+    mesh_shape: tuple
+    axes: tuple
+    hw: HardwareSpec = V5E
+
+    @property
+    def chips(self) -> int:
+        n = 1
+        for s in self.mesh_shape:
+            n *= s
+        return n
+
+    @property
+    def price_per_hour(self) -> float:
+        return self.chips * self.hw.price_per_chip_hour
+
+    def make_mesh(self):
+        return jax.make_mesh(self.mesh_shape, self.axes)
+
+
+CATALOG: list[CloudShape] = [
+    CloudShape("v5e-4", (2, 2), ("data", "model")),
+    CloudShape("v5e-8", (2, 4), ("data", "model")),
+    CloudShape("v5e-16", (4, 4), ("data", "model")),
+    CloudShape("v5e-32", (4, 8), ("data", "model")),
+    CloudShape("v5e-64", (8, 8), ("data", "model")),
+    CloudShape("v5e-128", (8, 16), ("data", "model")),
+    CloudShape("v5e-256", (16, 16), ("data", "model")),
+    CloudShape("2x-v5e-256", (2, 16, 16), ("pod", "data", "model")),
+]
+
+
+def get_shape(name: str) -> CloudShape:
+    for s in CATALOG:
+        if s.name == name:
+            return s
+    raise KeyError(f"unknown cloud shape {name!r}; known: {[s.name for s in CATALOG]}")

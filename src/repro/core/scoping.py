@@ -1,0 +1,139 @@
+"""ContainerStress — the paper's autonomous scoping engine.
+
+Nested-loop Monte Carlo simulation over the ML design parameters (paper Fig. 1):
+for every grid cell, the workload is instantiated and its compute cost measured;
+results feed the response surfaces (surfaces.py) and the recommender.
+
+Two cost probes:
+
+* ``run_measured``  — wall-clock of the jitted workload on the current backend,
+  repeated over Monte Carlo draws (TPSS-synthesized inputs). This is the paper's
+  own methodology (it timed CPU/GPU containers).
+* ``run_analytic``  — TPU-target extension: lower + compile the workload for a
+  catalog CloudShape and derive the three-term roofline cost from the compiled
+  artifact (no hardware needed). This is what lets one dev box scope 512-chip
+  configurations.
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterable, Optional
+
+import jax
+import numpy as np
+
+from repro.core.catalog import CloudShape
+from repro.core.cost_model import HardwareSpec, RooflineTerms, V5E, dollar_cost, roofline
+from repro.core.hlo_analysis import analyze_compiled
+
+
+@dataclass
+class CellResult:
+    params: dict
+    mean_s: float = float("nan")          # measured seconds per call
+    std_s: float = float("nan")
+    reps: int = 0
+    shape_name: Optional[str] = None
+    terms: Optional[RooflineTerms] = None
+    analysis: Optional[dict] = None
+    usd_per_1k_steps: Optional[float] = None
+
+    def cost(self) -> float:
+        """Scalar compute cost for surface fitting (seconds)."""
+        if self.terms is not None:
+            return self.terms.t_step
+        return self.mean_s
+
+
+@dataclass
+class ScopingResult:
+    rows: list = field(default_factory=list)
+
+    def param_names(self) -> list:
+        return list(self.rows[0].params) if self.rows else []
+
+    def to_arrays(self):
+        names = self.param_names()
+        X = np.array([[r.params[n] for n in names] for r in self.rows], float)
+        y = np.array([r.cost() for r in self.rows], float)
+        return names, X, y
+
+
+def _grid(grid: dict[str, Iterable]) -> list[dict]:
+    names = list(grid)
+    return [dict(zip(names, vals)) for vals in itertools.product(*grid.values())]
+
+
+class ContainerStress:
+    """workload_fn(params: dict) must return a zero-arg callable that executes one
+    unit of work (already jitted; inputs baked in / regenerated via MC draws), or
+    — for analytic mode — (jitted_fn, example_args: tuple) to lower+compile.
+    """
+
+    def __init__(self, hw: HardwareSpec = V5E):
+        self.hw = hw
+
+    # ------------------------- measured (paper-faithful) -------------------
+    def run_measured(self, workload_fn: Callable[[dict], Callable[[], Any]],
+                     grid: dict[str, Iterable], reps: int = 3,
+                     constraint: Optional[Callable[[dict], bool]] = None,
+                     verbose: bool = False) -> ScopingResult:
+        res = ScopingResult()
+        for params in _grid(grid):
+            if constraint and not constraint(params):
+                continue
+            try:
+                run = workload_fn(params)
+            except Exception as e:  # infeasible cell (e.g. OOM) — record & move on
+                if verbose:
+                    print(f"[containerstress] skip {params}: {e}")
+                continue
+            run()  # warmup / compile
+            ts = []
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                out = run()
+                jax.block_until_ready(out)
+                ts.append(time.perf_counter() - t0)
+            r = CellResult(params=params, mean_s=float(np.mean(ts)),
+                           std_s=float(np.std(ts)), reps=reps)
+            res.rows.append(r)
+            if verbose:
+                print(f"[containerstress] {params} -> {r.mean_s*1e3:.2f} ms "
+                      f"(±{r.std_s*1e3:.2f})")
+        return res
+
+    # ------------------------- analytic (TPU dry-run) ----------------------
+    def run_analytic(self, lower_fn: Callable[[dict, CloudShape], Any],
+                     grid: dict[str, Iterable], shapes: list[CloudShape],
+                     n_steps_for_cost: float = 1000.0,
+                     constraint: Optional[Callable[[dict], bool]] = None,
+                     verbose: bool = False) -> ScopingResult:
+        """lower_fn(params, shape) -> jax.stages.Lowered for that mesh."""
+        res = ScopingResult()
+        for params in _grid(grid):
+            if constraint and not constraint(params):
+                continue
+            for shape in shapes:
+                try:
+                    lowered = lower_fn(params, shape)
+                    compiled = lowered.compile()
+                except Exception as e:
+                    if verbose:
+                        print(f"[containerstress] {shape.name} {params} failed: {e}")
+                    continue
+                cost = analyze_compiled(compiled, n_devices=shape.chips)
+                terms = roofline(cost.flops, cost.bytes_accessed,
+                                 cost.collective_bytes, shape.chips, self.hw)
+                usd = dollar_cost(terms.t_step, n_steps_for_cost, shape.chips, self.hw)
+                r = CellResult(params=dict(params, shape=shape.chips),
+                               shape_name=shape.name, terms=terms,
+                               analysis=cost.as_dict(), usd_per_1k_steps=usd)
+                res.rows.append(r)
+                if verbose:
+                    print(f"[containerstress] {shape.name} {params}: "
+                          f"t_step={terms.t_step*1e3:.3f} ms dom={terms.dominant} "
+                          f"${usd:.2f}/1k steps")
+        return res

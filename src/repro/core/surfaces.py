@@ -1,0 +1,93 @@
+"""3-D response-surface methodology (paper Figs. 4-8): fit compute cost as a
+parametric function of the ML design parameters, in log-log space (costs scale
+polynomially, so log-log quadratic captures them well), and render ASCII contour
+surfaces for terminal reports.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass
+class ResponseSurface:
+    names: list
+    coef: np.ndarray
+    r2: float
+    degree: int
+
+    def predict(self, params: dict) -> float:
+        x = np.array([[float(params[n]) for n in self.names]])
+        return float(np.exp(_design(np.log(x), self.degree) @ self.coef)[0])
+
+    def predict_many(self, X: np.ndarray) -> np.ndarray:
+        return np.exp(_design(np.log(X), self.degree) @ self.coef)
+
+
+def _design(L: np.ndarray, degree: int) -> np.ndarray:
+    """Design matrix for log-space polynomial: 1 + linear + (quadratic+cross)."""
+    cols = [np.ones(len(L))]
+    k = L.shape[1]
+    cols += [L[:, i] for i in range(k)]
+    if degree >= 2:
+        for i in range(k):
+            for j in range(i, k):
+                cols.append(L[:, i] * L[:, j])
+    return np.stack(cols, axis=1)
+
+
+def fit_response_surface(names, X, y, degree: int = 2) -> ResponseSurface:
+    """X: (n, k) raw params; y: (n,) positive costs."""
+    X = np.asarray(X, float)
+    y = np.asarray(y, float)
+    keep = (y > 0) & np.all(X > 0, axis=1)
+    L, ly = np.log(X[keep]), np.log(y[keep])
+    A = _design(L, degree)
+    coef, *_ = np.linalg.lstsq(A, ly, rcond=None)
+    pred = A @ coef
+    ss_res = float(np.sum((ly - pred) ** 2))
+    ss_tot = float(np.sum((ly - ly.mean()) ** 2)) or 1.0
+    return ResponseSurface(list(names), coef, 1.0 - ss_res / ss_tot, degree)
+
+
+_RAMP = " .:-=+*#%@"
+
+
+def render_ascii_surface(xs, ys, Z, x_name: str = "x", y_name: str = "y",
+                         title: str = "") -> str:
+    """Z[i, j] = cost at (ys[i], xs[j]). Log-scaled density ramp, blue->red in the
+    paper; here ' ' (cheap) -> '@' (expensive)."""
+    Z = np.asarray(Z, float)
+    lz = np.log(np.where(Z > 0, Z, np.nan))
+    lo, hi = np.nanmin(lz), np.nanmax(lz)
+    span = (hi - lo) or 1.0
+    lines = []
+    if title:
+        lines.append(title)
+    lines.append(f"rows: {y_name} (bottom=min) / cols: {x_name} (left=min)  "
+                 f"ramp '{_RAMP}' = log cost min->max")
+    for i in range(Z.shape[0] - 1, -1, -1):
+        row = []
+        for j in range(Z.shape[1]):
+            v = lz[i, j]
+            if np.isnan(v):
+                row.append("·")   # infeasible cell (paper: missing surface region)
+            else:
+                row.append(_RAMP[min(int((v - lo) / span * (len(_RAMP) - 1e-9)), len(_RAMP) - 1)])
+        lines.append(f"{ys[i]:>10g} |" + "".join(row))
+    lines.append(" " * 11 + "+" + "-" * Z.shape[1])
+    lines.append(" " * 12 + " ".join(f"{x:g}" for x in xs))
+    return "\n".join(lines)
+
+
+def grid_to_matrix(rows, x_name: str, y_name: str, cost_key=None):
+    """Pivot CellResult rows into (xs, ys, Z) for rendering."""
+    xs = sorted({r.params[x_name] for r in rows})
+    ys = sorted({r.params[y_name] for r in rows})
+    Z = np.full((len(ys), len(xs)), np.nan)
+    for r in rows:
+        i = ys.index(r.params[y_name])
+        j = xs.index(r.params[x_name])
+        Z[i, j] = r.cost() if cost_key is None else cost_key(r)
+    return xs, ys, Z

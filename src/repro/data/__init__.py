@@ -1,0 +1,3 @@
+from repro.data.pipeline import TelemetryPipeline, TokenPipeline
+
+__all__ = ["TokenPipeline", "TelemetryPipeline"]

@@ -1,0 +1,6 @@
+from repro.distributed.sharding import (
+    Box, ShardingRules, DEFAULT_RULES, is_box, make_rules, unbox_axes, unbox_values,
+)
+
+__all__ = ["Box", "ShardingRules", "DEFAULT_RULES", "is_box", "make_rules",
+           "unbox_axes", "unbox_values"]

@@ -1,0 +1,57 @@
+"""Error-feedback int8 gradient compression for the DP all-reduce.
+
+Classic EF-SGD/1-bit-Adam style: quantize (grad + residual) to int8 with a
+per-tensor scale before the cross-pod reduction, keep the quantization error as
+local residual for the next step. Cuts DP all-reduce bytes 4x (f32) / 2x (bf16);
+the residual guarantees the accumulated error stays bounded (tested for
+convergence in tests/test_optim.py).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+class EFState(NamedTuple):
+    residual: Any
+
+
+def init(grads_like) -> EFState:
+    return EFState(jax.tree.map(lambda g: jnp.zeros_like(g, F32), grads_like))
+
+
+def quantize(x):
+    """f32 -> (int8, scale). Symmetric per-tensor."""
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q, scale):
+    return q.astype(F32) * scale
+
+
+def compress_grads(grads, state: EFState):
+    """Returns (quantized_tree [(q, scale) per leaf], new_state)."""
+    def one(g, r):
+        x = g.astype(F32) + r
+        q, s = quantize(x)
+        err = x - dequantize(q, s)
+        return (q, s), err
+
+    flat, treedef = jax.tree.flatten(grads)
+    res_flat = jax.tree.leaves(state.residual)
+    qs, errs = zip(*[one(g, r) for g, r in zip(flat, res_flat)])
+    return (jax.tree.unflatten(treedef, list(qs)),
+            EFState(jax.tree.unflatten(treedef, list(errs))))
+
+
+def decompress_grads(qtree):
+    return jax.tree.map(lambda qs: dequantize(*qs), qtree,
+                        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+                        and not isinstance(x[0], dict))

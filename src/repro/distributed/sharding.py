@@ -1,0 +1,146 @@
+"""Logical-axis sharding: params/activations carry *logical* axis names; a rules
+table maps them onto mesh axes (MaxText-style), with automatic fallback when a
+dimension is not divisible by the assigned mesh axes (e.g. kv_heads=1 under TP=16).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+@jax.tree_util.register_pytree_node_class
+class Box:
+    """A parameter leaf bundled with its logical axis names (one per dim).
+    Registered as a pytree node with `axes` as static aux data, so Box trees
+    pass through eval_shape/vmap/jit transparently."""
+
+    __slots__ = ("value", "axes")
+
+    def __init__(self, value, axes):
+        self.value = value
+        self.axes = tuple(axes)
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, axes, children):
+        return cls(children[0], axes)
+
+    def __repr__(self):
+        shape = getattr(self.value, "shape", None)
+        return f"Box(shape={shape}, axes={self.axes})"
+
+
+def is_box(x) -> bool:
+    return isinstance(x, Box)
+
+
+def unbox_values(tree):
+    return jax.tree.map(lambda b: b.value, tree, is_leaf=is_box)
+
+
+def unbox_axes(tree):
+    return jax.tree.map(lambda b: b.axes, tree, is_leaf=is_box)
+
+
+# Mapping: logical axis -> mesh axis (str), tuple of mesh axes, or None.
+DEFAULT_RULES: dict[str, Any] = {
+    # activations
+    "batch": ("pod", "data"),
+    "act_seq": None,
+    "sp_seq": "model",        # sequence-parallel fallback (heads % TP != 0)
+    "act_embed": None,
+    "act_heads": "model",
+    "act_mlp": "model",
+    "act_vocab": "model",
+    # weights
+    "embed": "data",          # FSDP axis
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_mlp": None,
+    "ssm_inner": "model",
+    "ssm_heads": "model",
+    "state": None,
+    "conv": None,
+    "stack": None,            # scan-stacked layer dim
+    # kv / ssm caches (serving)
+    "cache_batch": ("pod", "data"),
+    "cache_heads": None,
+    "cache_seq": "model",     # sequence-sharded KV cache (SP) — fits 32k..500k
+    "cache_dim": None,
+}
+
+
+class ShardingRules:
+    """Resolve logical axes -> PartitionSpec for a given mesh (or no-op w/o mesh)."""
+
+    def __init__(self, mesh: Optional[Mesh] = None, rules: Optional[dict] = None):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES)
+        if rules:
+            self.rules.update(rules)
+
+    # -- resolution ---------------------------------------------------------
+    def _mesh_axis_sizes(self) -> dict[str, int]:
+        if self.mesh is None:
+            return {}
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+
+    def spec_for(self, axes: Sequence[Optional[str]], shape: Sequence[int]) -> PartitionSpec:
+        """Build a PartitionSpec, dropping assignments that do not divide the dim
+        or that reuse an already-used mesh axis."""
+        sizes = self._mesh_axis_sizes()
+        used: set[str] = set()
+        entries = []
+        for dim, logical in zip(shape, axes):
+            assignment = self.rules.get(logical) if logical else None
+            if assignment is None:
+                entries.append(None)
+                continue
+            axes_tuple = assignment if isinstance(assignment, tuple) else (assignment,)
+            # keep only mesh axes that exist and are unused
+            axes_tuple = tuple(a for a in axes_tuple if a in sizes and a not in used)
+            # drop trailing axes until the product divides the dim
+            while axes_tuple and dim % math.prod(sizes[a] for a in axes_tuple) != 0:
+                axes_tuple = axes_tuple[:-1]
+            if not axes_tuple:
+                entries.append(None)
+                continue
+            used.update(axes_tuple)
+            entries.append(axes_tuple if len(axes_tuple) > 1 else axes_tuple[0])
+        while entries and entries[-1] is None:
+            entries.pop()
+        return PartitionSpec(*entries)
+
+    def sharding_for(self, axes: Sequence[Optional[str]], shape: Sequence[int]):
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec_for(axes, shape))
+
+    # -- use sites ----------------------------------------------------------
+    def constrain(self, x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+        """with_sharding_constraint if a mesh is configured, else identity."""
+        if self.mesh is None:
+            return x
+        spec = self.spec_for(axes, x.shape)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    def tree_shardings(self, boxed_tree):
+        """NamedSharding pytree for a Box-tree (params or cache specs)."""
+        def one(b: Box):
+            shape = b.value.shape
+            return self.sharding_for(b.axes, shape)
+        return jax.tree.map(one, boxed_tree, is_leaf=is_box)
+
+
+def make_rules(mesh: Optional[Mesh], overrides: Optional[dict] = None) -> ShardingRules:
+    return ShardingRules(mesh, overrides)

@@ -1,0 +1,8 @@
+# Compute hot-spots the paper optimizes: the MSET2 similarity operator is the
+# paper's named CUDA kernel (Fig. 3) -> Pallas MXU-tiled similarity kernel; the
+# 32k-prefill attention of the LM fleet gets a causal flash-attention kernel.
+from repro.kernels.attention import flash_attention, gqa_attention, mha_ref
+from repro.kernels.similarity import similarity, similarity_pallas, similarity_ref
+
+__all__ = ["similarity", "similarity_pallas", "similarity_ref",
+           "flash_attention", "gqa_attention", "mha_ref"]

@@ -1,0 +1,5 @@
+from repro.kernels.attention.flash import flash_attention
+from repro.kernels.attention.ops import gqa_attention
+from repro.kernels.attention.ref import mha_ref
+
+__all__ = ["flash_attention", "gqa_attention", "mha_ref"]

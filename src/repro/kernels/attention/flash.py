@@ -1,0 +1,105 @@
+"""Pallas TPU causal flash attention (online softmax, streaming KV blocks).
+
+Targets the 32k-prefill hot spot. Grid: (B*H, nq, nkv) with the KV dimension
+innermost; running max/denominator/accumulator live in VMEM scratch that persists
+across the sequential innermost grid steps (TPU 'arbitrary' dimension semantics).
+Causal skipping: KV blocks strictly above the diagonal are masked out (their
+contribution underflows to zero in the online rescale).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            nkv: int, bq: int, bkv: int, scale: float, causal: bool,
+            kv_len: int):
+    j = pl.program_id(2)
+    i = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(F32)                       # (bq, hd)
+    k = k_ref[0].astype(F32)                       # (bkv, hd)
+    v = v_ref[0].astype(F32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=F32) * scale   # (bq, bkv)
+    cols = j * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    mask = cols < kv_len                           # mask padded keys
+    if causal:
+        rows = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        mask = mask & (cols <= rows)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                            # (bq, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=F32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(j == nkv - 1)
+    def _emit():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 128,
+                    bkv: int = 128, interpret: bool = False):
+    """q/k/v: (B, S, H, hd), equal head counts (wrapper expands GQA).
+    Returns (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    scale = hd ** -0.5
+    bq_, bkv_ = min(bq, S), min(bkv, S)
+    Sp = _rup(S, max(bq_, bkv_))
+    if Sp != S:
+        pad = ((0, 0), (0, Sp - S), (0, 0), (0, 0))
+        q, k, v = jnp.pad(q, pad), jnp.pad(k, pad), jnp.pad(v, pad)
+    # (B, S, H, hd) -> (B*H, S, hd)
+    qt = q.transpose(0, 2, 1, 3).reshape(B * H, Sp, hd)
+    kt = k.transpose(0, 2, 1, 3).reshape(B * H, Sp, hd)
+    vt = v.transpose(0, 2, 1, 3).reshape(B * H, Sp, hd)
+
+    nq, nkv = Sp // bq_, Sp // bkv_
+    grid = (B * H, nq, nkv)
+    out = pl.pallas_call(
+        functools.partial(_kernel, nkv=nkv, bq=bq_, bkv=bkv_, scale=scale,
+                          causal=causal, kv_len=S),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq_, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bkv_, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bkv_, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq_, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sp, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq_, 1), F32),      # running max
+            pltpu.VMEM((bq_, 1), F32),      # running denominator
+            pltpu.VMEM((bq_, hd), F32),     # output accumulator
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out.reshape(B, H, Sp, hd).transpose(0, 2, 1, 3)
+    return out[:, :S]
+
+
+def _rup(v: int, mult: int) -> int:
+    return ((v + mult - 1) // mult) * mult

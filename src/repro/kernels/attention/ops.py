@@ -1,0 +1,28 @@
+"""Jit'd GQA wrapper around the flash-attention kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.attention.flash import flash_attention
+from repro.kernels.attention.ref import mha_ref
+
+
+@partial(jax.jit, static_argnames=("causal", "impl"))
+def gqa_attention(q, k, v, *, causal: bool = True, impl: str = "auto"):
+    """q: (B, S, H, hd); k/v: (B, S, K, hd) with H % K == 0."""
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    if K != H:
+        rep = H // K
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "pallas":
+        return flash_attention(q, k, v, causal=causal)
+    if impl == "interpret":
+        return flash_attention(q, k, v, causal=causal, interpret=True)
+    return mha_ref(q, k, v, causal=causal)

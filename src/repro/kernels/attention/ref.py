@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for causal flash attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def mha_ref(q, k, v, causal: bool = True, scale=None):
+    """q/k/v: (B, S, H, hd) (same head count; GQA is expanded by the wrapper).
+    Returns (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    scale = scale or (hd ** -0.5)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(F32), k.astype(F32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(F32)).astype(q.dtype)

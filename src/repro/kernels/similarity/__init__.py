@@ -1,0 +1,5 @@
+from repro.kernels.similarity.ops import similarity
+from repro.kernels.similarity.ref import similarity_ref
+from repro.kernels.similarity.similarity import similarity_pallas
+
+__all__ = ["similarity", "similarity_ref", "similarity_pallas"]

@@ -1,0 +1,27 @@
+"""Jit'd public wrapper for the similarity kernel.
+
+On TPU backends this lowers the Pallas kernel; on CPU (this dev container) it
+runs the kernel in interpret mode when explicitly requested, or the jnp
+reference — both produce identical values (tested).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.similarity.ref import similarity_ref
+from repro.kernels.similarity.similarity import similarity_pallas
+
+
+@partial(jax.jit, static_argnames=("gamma", "kind", "impl"))
+def similarity(x, y, *, gamma: float = 1.0, kind: str = "inverse_distance",
+               impl: str = "auto"):
+    """Pairwise similarity S = h(dist(x, y)). impl: auto|pallas|interpret|ref."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "pallas":
+        return similarity_pallas(x, y, gamma, kind)
+    if impl == "interpret":
+        return similarity_pallas(x, y, gamma, kind, interpret=True)
+    return similarity_ref(x, y, gamma, kind)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the pairwise similarity operator (MSET2 hot spot)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def similarity_ref(x, y, gamma: float = 1.0, kind: str = "inverse_distance"):
+    """S[i, j] = h(||x_i - y_j||). x: (m, n), y: (b, n) -> (m, b) f32.
+
+    kind:
+      inverse_distance — 1 / (1 + d / gamma)          (MSET-style nonlinear op)
+      gaussian         — exp(-d^2 / (2 gamma^2))      (AAKR kernel)
+    """
+    xf, yf = x.astype(F32), y.astype(F32)
+    x2 = jnp.sum(xf * xf, axis=-1)[:, None]
+    y2 = jnp.sum(yf * yf, axis=-1)[None, :]
+    d2 = jnp.maximum(x2 + y2 - 2.0 * (xf @ yf.T), 0.0)
+    if kind == "inverse_distance":
+        return 1.0 / (1.0 + jnp.sqrt(d2) / gamma)
+    if kind == "gaussian":
+        return jnp.exp(-d2 / (2.0 * gamma * gamma))
+    raise ValueError(f"unknown similarity kind {kind!r}")

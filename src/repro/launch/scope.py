@@ -1,0 +1,123 @@
+import os
+if "--analytic" in os.sys.argv or "--lm" in os.sys.argv:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ContainerStress CLI — the paper's workflow end to end.
+#
+#   measured MSET2 scoping (paper Figs. 4-5, CPU wall-clock Monte Carlo):
+#     PYTHONPATH=src python -m repro.launch.scope --mset --grid small
+#   analytic LM scoping across the catalog (TPU roofline dry-run):
+#     PYTHONPATH=src python -m repro.launch.scope --lm mamba2-130m --shape train_4k
+
+import argparse
+import json
+
+import numpy as np
+
+
+def run_mset(grid_name: str, reps: int, out: str):
+    import jax
+    from repro.core import (ContainerStress, fit_response_surface, grid_to_matrix,
+                            render_ascii_surface)
+    from repro.mset import estimate, train
+    from repro.tpss import TPSSParams, synthesize
+
+    grids = {
+        "small": {"n_signals": [8, 16, 32], "n_memvec": [64, 128, 256],
+                  "n_observations": [1024]},
+        "paper": {"n_signals": [32, 64, 128, 256], "n_memvec": [128, 256, 512, 1024],
+                  "n_observations": [4096]},
+    }
+    grid = grids[grid_name]
+
+    def workload(params):
+        key = jax.random.PRNGKey(hash(tuple(sorted(params.items()))) % 2**31)
+        X = synthesize(key, TPSSParams(n_signals=params["n_signals"],
+                                       n_obs=params["n_observations"]))
+        n_tr = int(params["n_observations"] * 0.75)
+
+        def run():
+            m = train(X[:n_tr], n_memvec=params["n_memvec"])
+            _, r = estimate(m, X[n_tr:])
+            return r
+        return run
+
+    cs = ContainerStress()
+    res = cs.run_measured(workload, grid, reps=reps, verbose=True,
+                          constraint=lambda p: p["n_memvec"] >= 2 * p["n_signals"])
+    names, X, y = res.to_arrays()
+    surf = fit_response_surface(names, X, y)
+    print(f"\nresponse surface fit: r^2 = {surf.r2:.4f}")
+    xs, ys, Z = grid_to_matrix(res.rows, "n_memvec", "n_signals")
+    print(render_ascii_surface(xs, ys, Z, "n_memvec", "n_signals",
+                               "MSET2 train+surveil compute cost (measured)"))
+    if out:
+        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+        with open(out, "w") as f:
+            json.dump([{**r.params, "mean_s": r.mean_s, "std_s": r.std_s}
+                       for r in res.rows], f, indent=1)
+        print(f"saved {out}")
+
+
+def run_lm(arch: str, shape_name: str, out: str):
+    from repro.configs import SHAPES, get_config, shape_applicable
+    from repro.core import (CATALOG, Constraint, ContainerStress, recommend)
+    from repro.launch.dryrun import lower_cell, probe_cost
+    from repro.core.cost_model import roofline, dollar_cost
+    from repro.core.scoping import CellResult
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        print(f"skip: {why}")
+        return
+    cs = ContainerStress()
+    rows = []
+    for cshape in CATALOG:
+        if cshape.chips < 64:
+            continue  # big-model scoping starts at v5e-64
+        mesh = cshape.make_mesh()
+        try:
+            with mesh:
+                cost = probe_cost(arch, shape_name, mesh, n_microbatches=8)
+        except Exception as e:
+            print(f"{cshape.name}: infeasible ({type(e).__name__})")
+            continue
+        terms = roofline(cost.flops, cost.bytes_accessed, cost.collective_bytes,
+                         cshape.chips)
+        usd = dollar_cost(terms.t_step, 1000, cshape.chips)
+        rows.append(CellResult(params={"shape": cshape.chips},
+                               shape_name=cshape.name, terms=terms,
+                               analysis=cost.as_dict(), usd_per_1k_steps=usd))
+        print(f"{cshape.name:12s} t_step={terms.t_step*1e3:9.2f}ms "
+              f"dom={terms.dominant:10s} ${usd:8.2f}/1k-steps")
+    cons = Constraint(max_step_latency_s=60.0)
+    rec = recommend(rows, cons)
+    print(f"\nrecommendation: {rec.shape.name if rec.shape else None} — {rec.reason}")
+    if out:
+        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+        with open(out, "w") as f:
+            json.dump([{**r.params, "shape_name": r.shape_name,
+                        "t_step": r.terms.t_step, "usd": r.usd_per_1k_steps}
+                       for r in rows], f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mset", action="store_true")
+    ap.add_argument("--grid", default="small")
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--lm")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+    if args.mset:
+        run_mset(args.grid, args.reps, args.out)
+    elif args.lm:
+        run_lm(args.lm, args.shape, args.out)
+    else:
+        ap.error("pick --mset or --lm <arch>")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,162 @@
+"""Fault-tolerant training driver.
+
+Runs on anything from this CPU dev box (smoke configs) to the production mesh:
+data pipeline -> jitted sharded train_step -> watchdog -> checkpoints -> restart.
+
+    PYTHONPATH=src python -m repro.launch.train --arch mamba2-130m --smoke --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.configs import get_config
+from repro.data import TokenPipeline
+from repro.distributed.fault import FaultInjector, StepWatchdog, loss_is_bad
+from repro.distributed.sharding import make_rules, unbox_values
+from repro.launch.mesh import make_dev_mesh
+from repro.launch.steps import StepBuilder, batch_sharding
+from repro.optim import AdamWConfig, adamw, warmup_cosine
+
+
+@dataclass
+class TrainJob:
+    arch: str
+    smoke: bool = True
+    steps: int = 100
+    seq_len: int = 256
+    global_batch: int = 8
+    n_microbatches: int = 1
+    peak_lr: float = 3e-3
+    warmup: int = 20
+    ckpt_dir: str = "checkpoints"
+    ckpt_every: int = 25
+    keep: int = 3
+    seed: int = 0
+    use_mesh: bool = True
+    log_every: int = 10
+    max_restarts: int = 3
+    injector: Optional[FaultInjector] = None
+    history: list = field(default_factory=list)
+
+
+def build(job: TrainJob):
+    cfg = get_config(job.arch, smoke=job.smoke)
+    mesh = make_dev_mesh() if job.use_mesh and len(jax.devices()) > 1 else None
+    rules = make_rules(mesh)
+    opt = AdamWConfig(lr=warmup_cosine(job.peak_lr, job.warmup, job.steps))
+    sb = StepBuilder(cfg, rules, n_microbatches=job.n_microbatches, opt=opt)
+    pipe = TokenPipeline(cfg.vocab_size, job.seq_len, job.global_batch, seed=job.seed)
+    return cfg, mesh, rules, sb, pipe
+
+
+def train(job: TrainJob, verbose: bool = True) -> dict:
+    cfg, mesh, rules, sb, pipe = build(job)
+    ckpt = Checkpointer(os.path.join(job.ckpt_dir, cfg.name), keep=job.keep)
+    watchdog = StepWatchdog()
+
+    params = sb.model.init_values(jax.random.PRNGKey(job.seed))
+    opt_state = adamw.init(params)
+    start_step = 0
+
+    # resume if checkpoints exist (elastic: works across device counts)
+    _, pboxed = sb.abstract_params()
+    shardings = (sb.param_shardings(pboxed), sb.opt_shardings(sb.param_shardings(pboxed))) \
+        if mesh is not None else (None, None)
+    if ckpt.latest_step() is not None:
+        (params, opt_state), start_step, _ = ckpt.restore_latest_valid(
+            (params, opt_state), shardings=shardings if mesh is not None else None)
+        if verbose:
+            print(f"[train] resumed from step {start_step}")
+
+    step_fn = sb.jit_train_step(donate=True)
+    restarts = 0
+    step = start_step
+    poisoned: set[int] = set()        # data windows that produced bad losses
+    metrics_out: dict[str, Any] = {}
+    t_train0 = time.time()
+    while step < job.steps:
+        if step in poisoned:          # skip bad data windows after a restore
+            step += 1
+            continue
+        batch = pipe.batch(step)
+        t0 = time.perf_counter()
+        if job.injector:
+            job.injector.maybe_stall(step)   # simulated straggler device
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = metrics["loss"]
+        if job.injector:
+            loss = job.injector.corrupt_loss(step, loss)
+        loss_v = float(loss)
+        dt = time.perf_counter() - t0
+
+        if loss_is_bad(loss_v):
+            restarts += 1
+            poisoned.add(step)
+            if restarts > job.max_restarts:
+                raise RuntimeError(f"too many restarts ({restarts}) at step {step}")
+            if verbose:
+                print(f"[train] BAD LOSS at step {step}; restoring last checkpoint "
+                      f"(restart {restarts}/{job.max_restarts})")
+            if ckpt.latest_step() is not None:
+                (params, opt_state), step, _ = ckpt.restore_latest_valid(
+                    (params, opt_state),
+                    shardings=shardings if mesh is not None else None)
+            else:
+                params = sb.model.init_values(jax.random.PRNGKey(job.seed))
+                opt_state = adamw.init(params)
+                step = 0
+            continue
+
+        slow = watchdog.observe(step, dt) if step > start_step else False
+        job.history.append({"step": step, "loss": loss_v, "dt": dt, "slow": slow})
+        if verbose and (step % job.log_every == 0 or slow):
+            print(f"[train] step {step:5d} loss {loss_v:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.2f} {dt*1e3:.0f}ms"
+                  + ("  <-- straggler" if slow else ""))
+        step += 1
+        if step % job.ckpt_every == 0:
+            ckpt.save_async(step, (params, opt_state), extra={"loss": loss_v})
+    ckpt.wait()
+    ckpt.save(job.steps, (params, opt_state))
+    metrics_out = {
+        "final_loss": job.history[-1]["loss"] if job.history else float("nan"),
+        "first_loss": job.history[0]["loss"] if job.history else float("nan"),
+        "steps": step,
+        "restarts": restarts,
+        "straggler_events": len(watchdog.events),
+        "wall_s": time.time() - t_train0,
+    }
+    if verbose:
+        print(f"[train] done: {metrics_out}")
+    return metrics_out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--full", action="store_true", help="full (non-smoke) config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    args = ap.parse_args()
+    job = TrainJob(arch=args.arch, smoke=not args.full, steps=args.steps,
+                   seq_len=args.seq_len, global_batch=args.batch,
+                   n_microbatches=args.microbatches, peak_lr=args.lr,
+                   ckpt_dir=args.ckpt_dir)
+    train(job)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.mset.mset2 import MSETModel, estimate, surveil, train
+from repro.mset.pluggable import REGISTRY, get_plugin
+from repro.mset.sprt import SPRTParams, empirical_false_alarm_rate, sprt
+
+__all__ = ["MSETModel", "train", "estimate", "surveil", "sprt", "SPRTParams",
+           "empirical_false_alarm_rate", "REGISTRY", "get_plugin"]

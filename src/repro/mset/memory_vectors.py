@@ -1,0 +1,44 @@
+"""Memory-vector selection for MSET2 training.
+
+Classic two-stage procedure: (1) the min-max algorithm keeps every observation
+that realizes the minimum or maximum of some signal (guarantees coverage of the
+operating envelope), then (2) the remaining budget is filled by vector-ordering —
+observations sorted by their vector norm and sampled equidistantly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def select_memory_vectors(X, n_memvec: int):
+    """X: (n_obs, n_signals) -> indices (n_memvec,) into X.
+
+    jit-compatible (fixed output size). If 2*n_signals >= n_memvec, min-max
+    indices are truncated deterministically.
+    """
+    n_obs, n_sig = X.shape
+    xf = X.astype(F32)
+    mins = jnp.argmin(xf, axis=0)                       # (n_sig,)
+    maxs = jnp.argmax(xf, axis=0)
+    envelope = jnp.concatenate([mins, maxs])            # (2*n_sig,)
+
+    # vector-ordering: sort all observations by norm, take equidistant samples
+    norms = jnp.linalg.norm(xf, axis=1)
+    order = jnp.argsort(norms)
+    take = jnp.linspace(0, n_obs - 1, n_memvec).astype(jnp.int32)
+    ordered = order[take]                               # (n_memvec,)
+
+    # prefer envelope vectors, fill the rest with ordered samples, dedup by
+    # position overwrite (duplicates are harmless for MSET but wasteful; the
+    # equidistant fill makes collisions rare).
+    n_env = min(2 * n_sig, n_memvec)
+    idx = jnp.concatenate([envelope[:n_env], ordered[: n_memvec - n_env]])
+    return idx
+
+
+def build_memory_matrix(X, n_memvec: int):
+    idx = select_memory_vectors(X, n_memvec)
+    return X[idx], idx

@@ -1,0 +1,102 @@
+"""Pluggable prognostic-algorithm registry (paper §II.B: the framework must
+accommodate other nonlinear-nonparametric-regression techniques — NN, SVM, AAKR).
+
+Each plugin implements  train(X, n_memvec, **kw) -> model  and
+estimate(model, X) -> (x_hat, residuals). ContainerStress scopes any of them.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.similarity import similarity
+from repro.mset import mset2
+from repro.mset.memory_vectors import build_memory_matrix
+
+F32 = jnp.float32
+
+
+@dataclass(frozen=True)
+class Plugin:
+    name: str
+    train: Callable
+    estimate: Callable
+
+
+# --------------------------- AAKR ------------------------------------------
+
+@dataclass
+class AAKRModel:
+    D: jax.Array
+    gamma: float
+    mean: jax.Array
+    std: jax.Array
+
+
+jax.tree_util.register_pytree_node(
+    AAKRModel,
+    lambda m: ((m.D, m.mean, m.std), (m.gamma,)),
+    lambda aux, l: AAKRModel(l[0], aux[0], l[1], l[2]))
+
+
+def aakr_train(X, n_memvec: int, *, gamma=None, impl="auto", **_):
+    Xf = X.astype(F32)
+    mean, std = jnp.mean(Xf, 0), jnp.std(Xf, 0) + 1e-6
+    Xs = (Xf - mean) / std
+    D, _ = build_memory_matrix(Xs, n_memvec)
+    g = float(gamma) if gamma is not None else 1.0
+    return AAKRModel(D, g, mean, std)
+
+
+def aakr_estimate(model: AAKRModel, X, impl="auto"):
+    Xs = (X.astype(F32) - model.mean) / model.std
+    K = similarity(model.D, Xs, gamma=model.gamma, kind="gaussian", impl=impl)  # (m, b)
+    w = K / (jnp.sum(K, axis=0, keepdims=True) + 1e-9)
+    Xhat = (w.T @ model.D) * model.std + model.mean
+    return Xhat, X - Xhat
+
+
+# --------------------------- ridge (linear baseline) ------------------------
+
+@dataclass
+class RidgeModel:
+    W: jax.Array          # (n, n) auto-associative map
+    mean: jax.Array
+    std: jax.Array
+
+
+jax.tree_util.register_pytree_node(
+    RidgeModel,
+    lambda m: ((m.W, m.mean, m.std), ()),
+    lambda aux, l: RidgeModel(*l))
+
+
+def ridge_train(X, n_memvec: int = 0, *, reg: float = 1e-3, **_):
+    """Auto-associative ridge regression x -> x (leave-one-in linear baseline)."""
+    Xf = X.astype(F32)
+    mean, std = jnp.mean(Xf, 0), jnp.std(Xf, 0) + 1e-6
+    Xs = (Xf - mean) / std
+    n = Xs.shape[1]
+    G = Xs.T @ Xs / Xs.shape[0] + reg * jnp.eye(n, dtype=F32)
+    W = jnp.linalg.solve(G, Xs.T @ Xs / Xs.shape[0])
+    return RidgeModel(W, mean, std)
+
+
+def ridge_estimate(model: RidgeModel, X, **_):
+    Xs = (X.astype(F32) - model.mean) / model.std
+    Xhat = (Xs @ model.W) * model.std + model.mean
+    return Xhat, X - Xhat
+
+
+REGISTRY: dict[str, Plugin] = {
+    "mset2": Plugin("mset2", mset2.train, mset2.estimate),
+    "aakr": Plugin("aakr", aakr_train, aakr_estimate),
+    "ridge": Plugin("ridge", ridge_train, ridge_estimate),
+}
+
+
+def get_plugin(name: str) -> Plugin:
+    return REGISTRY[name]

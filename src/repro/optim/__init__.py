@@ -1,0 +1,6 @@
+from repro.optim.adamw import AdamWConfig, AdamWState, global_norm, init, update
+from repro.optim.grad_accum import microbatched_value_and_grad
+from repro.optim.schedules import constant, warmup_cosine
+
+__all__ = ["AdamWConfig", "AdamWState", "init", "update", "global_norm",
+           "microbatched_value_and_grad", "warmup_cosine", "constant"]

@@ -1,0 +1,46 @@
+"""Scan-based microbatch gradient accumulation: cuts activation memory by
+n_microbatches while keeping one optimizer step per global batch (and letting
+XLA overlap the per-microbatch DP reduce-scatter with the next microbatch's
+compute under --xla_tpu_enable_async_collective_fusion).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def microbatched_value_and_grad(loss_fn: Callable, n_microbatches: int):
+    """loss_fn(params, batch) -> (loss, metrics). Batch leaves have leading
+    global-batch dim divisible by n_microbatches. Returns fn(params, batch) ->
+    ((loss, metrics), grads) averaged over microbatches."""
+    vg = jax.value_and_grad(loss_fn, has_aux=True)
+    if n_microbatches <= 1:
+        return vg
+
+    def split(x):
+        b = x.shape[0]
+        assert b % n_microbatches == 0, (b, n_microbatches)
+        return x.reshape(n_microbatches, b // n_microbatches, *x.shape[1:])
+
+    def fn(params, batch):
+        mb = jax.tree.map(split, batch)
+
+        def body(carry, mbatch):
+            (loss_acc, grad_acc, metrics_acc) = carry
+            (loss, metrics), grads = vg(params, mbatch)
+            grad_acc = jax.tree.map(jnp.add, grad_acc, grads)
+            metrics_acc = jax.tree.map(jnp.add, metrics_acc, metrics)
+            return (loss_acc + loss, grad_acc, metrics_acc), None
+
+        (l0, m0), g0 = vg(params, jax.tree.map(lambda x: x[0], mb))
+        rest = jax.tree.map(lambda x: x[1:], mb)
+        (loss, grads, metrics), _ = lax.scan(body, (l0, g0, m0), rest)
+        inv = 1.0 / n_microbatches
+        return ((loss * inv, jax.tree.map(lambda m: m * inv, metrics)),
+                jax.tree.map(lambda g: g * inv, grads))
+
+    return fn

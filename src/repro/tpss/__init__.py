@@ -1,0 +1,3 @@
+from repro.tpss.synth import TPSSParams, inject_anomaly, synthesize, synthesize_batch
+
+__all__ = ["TPSSParams", "synthesize", "synthesize_batch", "inject_anomaly"]

@@ -1,0 +1,8 @@
+import os
+
+# Tests must see ONE device (the dry-run sets its own XLA_FLAGS in subprocesses).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

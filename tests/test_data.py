@@ -1,0 +1,39 @@
+"""Data pipeline determinism + shard disjointness."""
+import numpy as np
+
+from repro.data import TokenPipeline
+
+
+def test_determinism_per_step():
+    p = TokenPipeline(vocab_size=1000, seq_len=32, global_batch=4, seed=3)
+    a = p.batch(5)
+    b = p.batch(5)
+    c = p.batch(6)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+    assert not np.array_equal(np.asarray(a["tokens"]), np.asarray(c["tokens"]))
+
+
+def test_targets_are_shifted_tokens():
+    p = TokenPipeline(vocab_size=1000, seq_len=16, global_batch=2)
+    b = p.batch(0)
+    assert b["tokens"].shape == (2, 16)
+    assert b["targets"].shape == (2, 16)
+    np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]),
+                                  np.asarray(b["targets"][:, :-1]))
+
+
+def test_host_shards_are_disjoint_and_deterministic():
+    full = [TokenPipeline(1000, 16, 8, seed=1, n_hosts=2, host_id=h) for h in (0, 1)]
+    b0 = np.asarray(full[0].batch(3)["tokens"])
+    b1 = np.asarray(full[1].batch(3)["tokens"])
+    assert b0.shape == (4, 16)
+    assert not np.array_equal(b0, b1)
+    # re-instantiation reproduces the same shard
+    again = TokenPipeline(1000, 16, 8, seed=1, n_hosts=2, host_id=0)
+    np.testing.assert_array_equal(b0, np.asarray(again.batch(3)["tokens"]))
+
+
+def test_tokens_in_vocab_range():
+    p = TokenPipeline(vocab_size=128, seq_len=64, global_batch=4)
+    t = np.asarray(p.batch(0)["tokens"])
+    assert t.min() >= 0 and t.max() < 128

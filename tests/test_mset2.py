@@ -1,0 +1,71 @@
+"""MSET2 + memory-vector selection + pluggable algorithms."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.mset import estimate, get_plugin, train
+from repro.mset.memory_vectors import select_memory_vectors
+from repro.tpss import TPSSParams, synthesize
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def telemetry():
+    return synthesize(KEY, TPSSParams(n_signals=16, n_obs=2048))
+
+
+def test_memory_vector_selection_covers_envelope(telemetry):
+    X = telemetry
+    idx = select_memory_vectors(X, 64)
+    assert idx.shape == (64,)
+    sel = X[idx]
+    # min-max algorithm guarantees the envelope is represented
+    assert np.allclose(np.asarray(sel.min(0)), np.asarray(X.min(0)))
+    assert np.allclose(np.asarray(sel.max(0)), np.asarray(X.max(0)))
+
+
+def test_mset2_reconstructs_clean_data(telemetry):
+    X = telemetry
+    model = train(X[:1536], n_memvec=128)
+    xhat, res = estimate(model, X[1536:])
+    ratio = float(jnp.sqrt(jnp.mean(res**2)) / jnp.std(X[1536:]))
+    assert ratio < 0.15, f"residual ratio {ratio}"
+
+
+def test_mset2_estimate_shapes(telemetry):
+    model = train(telemetry[:1024], n_memvec=64)
+    xhat, res = estimate(model, telemetry[1024:1100])
+    assert xhat.shape == (76, 16)
+    assert res.shape == (76, 16)
+    assert not bool(jnp.any(jnp.isnan(xhat)))
+
+
+def test_mset2_memvec_interpolation(telemetry):
+    """Estimating the memory vectors themselves must be near-exact."""
+    model = train(telemetry[:1024], n_memvec=64)
+    D_raw = model.D * model.std + model.mean
+    xhat, res = estimate(model, D_raw)
+    rel = float(jnp.mean(jnp.abs(res)) / jnp.std(D_raw))
+    assert rel < 0.05, rel
+
+
+def test_mset2_detects_structural_change(telemetry):
+    model = train(telemetry[:1536], n_memvec=128)
+    clean = telemetry[1536:]
+    _, res_clean = estimate(model, clean)
+    broken = clean.at[:, 3].set(clean[:, 3] + 8 * float(jnp.std(clean[:, 3])))
+    _, res_broken = estimate(model, broken)
+    assert float(jnp.mean(jnp.abs(res_broken[:, 3]))) > \
+        5 * float(jnp.mean(jnp.abs(res_clean[:, 3])))
+
+
+@pytest.mark.parametrize("name", ["mset2", "aakr", "ridge"])
+def test_pluggable_algorithms(name, telemetry):
+    plug = get_plugin(name)
+    model = plug.train(telemetry[:1024], 64)
+    xhat, res = plug.estimate(model, telemetry[1024:1200])
+    assert xhat.shape == (176, 16)
+    ratio = float(jnp.sqrt(jnp.mean(res**2)) / jnp.std(telemetry))
+    assert ratio < 0.5, f"{name}: {ratio}"

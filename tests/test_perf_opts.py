@@ -1,0 +1,104 @@
+"""Correctness of the §Perf optimization paths (they change numerics paths, so
+they get their own equivalence tests)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.distributed import make_rules
+from repro.models import build_model
+from repro.models.layers import _sdpa
+
+RULES = make_rules(None)
+KEY = jax.random.PRNGKey(0)
+
+
+def test_bucketed_block_causal_matches_full():
+    cfg0 = get_config("minitron-4b", smoke=True)
+    B, S, H, K, hd = 2, 128, 4, 2, 16
+    q = jax.random.normal(KEY, (B, S, H, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, K, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, K, hd))
+    ref = _sdpa(cfg0, q, k, v, causal=True, q_chunk=16)
+    for unroll in (False, True):
+        cfg = cfg0.replace(causal_block_skip=True, unroll=unroll)
+        out = _sdpa(cfg, q, k, v, causal=True, q_chunk=16)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-6, rtol=2e-6)
+
+
+def test_bucketed_skip_nondivisible_chunks():
+    cfg = get_config("minitron-4b", smoke=True).replace(causal_block_skip=True)
+    B, S, H, K, hd = 1, 96, 2, 2, 16   # 6 chunks of 16 -> nb falls back to 6
+    q = jax.random.normal(KEY, (B, S, H, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, K, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, K, hd))
+    ref = _sdpa(get_config("minitron-4b", smoke=True), q, k, v, causal=True,
+                q_chunk=16)
+    out = _sdpa(cfg, q, k, v, causal=True, q_chunk=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-6)
+
+
+def test_seq_layout_decode_matches_heads_layout():
+    cfg = get_config("nemotron-4-15b", smoke=True)
+    B, Skv, H, K, hd = 2, 64, 4, 2, 16
+    q = jax.random.normal(KEY, (B, 1, H, hd))
+    kc = jax.random.normal(jax.random.PRNGKey(1), (B, K, Skv, hd))   # (B,K,S,hd)
+    vc = jax.random.normal(jax.random.PRNGKey(2), (B, K, Skv, hd))
+    out_seq = _sdpa(cfg, q, kc, vc, causal=False, kv_valid_len=40, layout="seq")
+    # heads layout expects (B, S, K, hd)
+    out_heads = _sdpa(cfg, q, kc.swapaxes(1, 2), vc.swapaxes(1, 2), causal=False,
+                      kv_valid_len=40, layout="heads")
+    np.testing.assert_allclose(np.asarray(out_seq), np.asarray(out_heads),
+                               atol=2e-6, rtol=2e-6)
+
+
+def test_bf16_loss_close_to_f32_loss():
+    cfg = get_config("minitron-4b", smoke=True).replace(dtype="float32")
+    model = build_model(cfg)
+    params = model.init_values(KEY)
+    toks = jax.random.randint(KEY, (2, 32), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "targets": jnp.roll(toks, -1, 1)}
+    l32, _ = model.loss(params, batch, RULES)
+    cfg16 = cfg.replace(softmax_dtype="bfloat16")
+    m16 = build_model(cfg16)
+    l16, _ = m16.loss(params, batch, RULES)
+    assert abs(float(l32) - float(l16)) < 0.05 * float(l32)
+
+
+def test_bf16_loss_gradients_finite():
+    cfg = get_config("minitron-4b", smoke=True).replace(softmax_dtype="bfloat16")
+    model = build_model(cfg)
+    params = model.init_values(KEY)
+    toks = jax.random.randint(KEY, (2, 32), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "targets": jnp.roll(toks, -1, 1)}
+    g = jax.grad(lambda p: model.loss(p, batch, RULES)[0])(params)
+    for leaf in jax.tree.leaves(g):
+        assert np.isfinite(np.asarray(leaf, np.float32)).all()
+
+
+def test_elasticity_plan():
+    from repro.core import Constraint
+    from repro.core.catalog import CATALOG
+    from repro.core.recommender import elasticity_plan
+    from repro.core.surfaces import ResponseSurface
+    import numpy as np
+
+    # synthetic per-shape surfaces: t = C * n_signals / chips
+    surfaces = {}
+    for s in CATALOG:
+        X = np.array([[8.0], [64.0], [512.0]])
+        y = 1e-3 * X[:, 0] / s.chips
+        from repro.core.surfaces import fit_response_surface
+        surfaces[s.name] = fit_response_surface(["n_signals"], X, y, degree=1)
+    plan = elasticity_plan(surfaces, CATALOG, "n_signals",
+                           [8, 128, 2048, 32768], {},
+                           Constraint(max_step_latency_s=5e-3))
+    feasible = [p[1] for p in plan if p[1] is not None]
+    chips = [[s.chips for s in CATALOG if s.name == n][0] for n in feasible]
+    assert chips == sorted(chips), f"growth plan must be monotone: {plan}"
+    assert chips[0] <= 8 and chips[-1] >= 32
+    # infeasible values (beyond the catalog) may only appear at the tail
+    none_idx = [i for i, p in enumerate(plan) if p[1] is None]
+    assert none_idx == list(range(len(plan) - len(none_idx), len(plan)))

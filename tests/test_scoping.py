@@ -1,0 +1,105 @@
+"""ContainerStress engine: cost model, HLO parsing, surfaces, recommender."""
+import numpy as np
+import pytest
+
+from repro.core import (CATALOG, CellResult, Constraint, ContainerStress,
+                        RooflineTerms, dollar_cost, fit_response_surface,
+                        get_shape, grid_to_matrix, mfu, parse_collectives,
+                        recommend, render_ascii_surface, roofline)
+
+HLO = """
+ENTRY %main {
+  %ag = bf16[16,1024]{1,0} all-gather(%p0), replica_groups=[2,4]<=[8]
+  %ar = f32[512,512]{1,0} all-reduce(%x), to_apply=%sum
+  %rs = f32[64]{0} reduce-scatter(%y), dimensions={0}
+  %a2a = bf16[4,128]{1,0} all-to-all(%z)
+  %cp = f32[32,32]{1,0} collective-permute(%w), source_target_pairs={{0,1}}
+  %dot = f32[512,512]{1,0} dot(%a, %b)
+}
+"""
+
+
+def test_parse_collectives_kinds_and_bytes():
+    st = parse_collectives(HLO)
+    assert st.bytes_by_kind["all-gather"] == 16 * 1024 * 2
+    assert st.bytes_by_kind["all-reduce"] == 512 * 512 * 4
+    assert st.bytes_by_kind["reduce-scatter"] == 64 * 4
+    assert st.bytes_by_kind["all-to-all"] == 4 * 128 * 2
+    assert st.bytes_by_kind["collective-permute"] == 32 * 32 * 4
+    assert st.total_count == 5
+    assert "dot" not in st.bytes_by_kind
+
+
+def test_roofline_terms():
+    t = roofline(flops_global=197e12 * 256, bytes_global=0, coll_bytes_global=0,
+                 chips=256)
+    assert abs(t.t_compute - 1.0) < 1e-9
+    assert t.dominant == "compute"
+    t2 = roofline(1e12, 819e9 * 8, 0, chips=8)
+    assert abs(t2.t_memory - 1.0) < 1e-9
+
+
+def test_dollar_cost():
+    # 1 s/step x 3600 steps x 256 chips @ $1.20 -> $307.2
+    assert abs(dollar_cost(1.0, 3600, 256) - 256 * 1.2) < 1e-6
+
+
+def test_mfu_bounds():
+    assert 0.49 < mfu(197e12 * 0.5, 1.0, 1) < 0.51
+
+
+def test_response_surface_recovers_power_law():
+    rng = np.random.default_rng(0)
+    X = rng.uniform(8, 512, size=(60, 2))
+    y = 1e-6 * X[:, 0] ** 2 * X[:, 1] * np.exp(rng.normal(0, 0.01, 60))
+    surf = fit_response_surface(["m", "n"], X, y)
+    assert surf.r2 > 0.99
+    pred = surf.predict({"m": 100.0, "n": 50.0})
+    assert abs(pred - 1e-6 * 100**2 * 50) / (1e-6 * 100**2 * 50) < 0.1
+
+
+def test_recommender_picks_cheapest_feasible():
+    rows = []
+    for name, t in [("v5e-64", 0.5), ("v5e-128", 0.25), ("v5e-256", 0.12)]:
+        rows.append(CellResult(params={}, shape_name=name,
+                               terms=RooflineTerms(t, t / 2, t / 3),
+                               analysis={"peak_memory_per_device": 8e9}))
+    rec = recommend(rows, Constraint(max_step_latency_s=0.3))
+    assert rec.shape.name == "v5e-128"      # cheapest that meets 0.3 s
+    rec2 = recommend(rows, Constraint(max_step_latency_s=0.01))
+    assert rec2.shape is None
+
+
+def test_recommender_memory_constraint():
+    rows = [CellResult(params={}, shape_name="v5e-64",
+                       terms=RooflineTerms(0.1, 0.1, 0.1),
+                       analysis={"peak_memory_per_device": 64e9})]  # > 16 GiB
+    rec = recommend(rows, Constraint(max_step_latency_s=10))
+    assert rec.shape is None
+
+
+def test_measured_scoping_and_render():
+    import jax.numpy as jnp
+
+    def workload(params):
+        n = params["n"]
+        x = jnp.ones((n, n))
+        import jax
+        f = jax.jit(lambda a: (a @ a).sum())
+        return lambda: f(x)
+
+    cs = ContainerStress()
+    res = cs.run_measured(workload, {"n": [32, 64], "m": [1, 2]}, reps=2)
+    assert len(res.rows) == 4
+    xs, ys, Z = grid_to_matrix(res.rows, "n", "m")
+    txt = render_ascii_surface(xs, ys, Z, "n", "m")
+    assert "rows: m" in txt
+    names, X, y = res.to_arrays()
+    assert X.shape == (4, 2) and (y > 0).all()
+
+
+def test_catalog_shapes():
+    s = get_shape("v5e-256")
+    assert s.chips == 256
+    assert get_shape("2x-v5e-256").chips == 512
+    assert all(c.price_per_hour > 0 for c in CATALOG)

@@ -1,0 +1,35 @@
+"""SPRT detector: false-alarm bound + detection latency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.mset import SPRTParams, empirical_false_alarm_rate, sprt
+
+
+def test_false_alarm_rate_on_clean_noise():
+    key = jax.random.PRNGKey(1)
+    r = jax.random.normal(key, (20_000, 8))
+    alarms, _, _ = sprt(r, jnp.ones(8), SPRTParams(alpha=1e-3, beta=1e-3, m_shift=4.0))
+    far = float(empirical_false_alarm_rate(alarms))
+    assert far < 5e-3, far
+
+
+def test_detects_mean_shift_quickly():
+    key = jax.random.PRNGKey(2)
+    r = jax.random.normal(key, (2000, 4))
+    r = r.at[1000:, 2].add(3.0)  # 3-sigma shift on signal 2
+    alarms, _, _ = sprt(r, jnp.ones(4), SPRTParams(m_shift=3.0))
+    a = np.asarray(alarms)
+    post = np.argwhere(a[1000:, 2]).ravel()
+    assert len(post) > 0 and post[0] < 50, post[:3]
+    # other signals stay mostly quiet
+    assert a[:, [0, 1, 3]].mean() < 0.01
+
+
+def test_detects_negative_shift():
+    key = jax.random.PRNGKey(3)
+    r = jax.random.normal(key, (1000, 2))
+    r = r.at[500:, 0].add(-3.0)
+    alarms, _, _ = sprt(r, jnp.ones(2))
+    post = np.argwhere(np.asarray(alarms)[500:, 0]).ravel()
+    assert len(post) > 0 and post[0] < 50

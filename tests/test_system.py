@@ -1,0 +1,111 @@
+"""End-to-end behaviour tests: training convergence, fault-tolerant restart,
+straggler detection, serving, and the full paper workflow (TPSS -> MSET2 ->
+SPRT -> scoping -> recommendation)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed.fault import FaultInjector, StepWatchdog
+from repro.launch.train import TrainJob, train
+
+
+def test_training_loss_decreases(tmp_path):
+    job = TrainJob(arch="mamba2-130m", steps=30, seq_len=128, global_batch=4,
+                   ckpt_dir=str(tmp_path), log_every=100)
+    m = train(job, verbose=False)
+    assert m["final_loss"] < m["first_loss"] - 0.5, m
+    assert m["restarts"] == 0
+
+
+def test_training_recovers_from_nan(tmp_path):
+    inj = FaultInjector(nan_steps={12})
+    job = TrainJob(arch="mamba2-130m", steps=25, seq_len=64, global_batch=4,
+                   ckpt_dir=str(tmp_path), ckpt_every=5, injector=inj,
+                   log_every=100)
+    m = train(job, verbose=False)
+    assert m["restarts"] == 1
+    assert m["steps"] >= 25
+    assert np.isfinite(m["final_loss"])
+
+
+def test_training_resumes_from_checkpoint(tmp_path):
+    job1 = TrainJob(arch="mamba2-130m", steps=10, seq_len=64, global_batch=4,
+                    ckpt_dir=str(tmp_path), ckpt_every=5, log_every=100)
+    train(job1, verbose=False)
+    job2 = TrainJob(arch="mamba2-130m", steps=20, seq_len=64, global_batch=4,
+                    ckpt_dir=str(tmp_path), ckpt_every=5, log_every=100)
+    m = train(job2, verbose=False)
+    first_resumed_step = job2.history[0]["step"]
+    assert first_resumed_step >= 10          # did not restart from scratch
+    assert m["final_loss"] < 7.0
+
+
+def test_straggler_watchdog_flags_slow_steps(tmp_path):
+    inj = FaultInjector(slow_steps={15}, slow_s=0.5)
+    job = TrainJob(arch="mamba2-130m", steps=20, seq_len=64, global_batch=4,
+                   ckpt_dir=str(tmp_path), injector=inj, log_every=100)
+    m = train(job, verbose=False)
+    assert m["straggler_events"] >= 1
+
+
+def test_watchdog_unit():
+    wd = StepWatchdog(threshold=3.0, warmup_steps=2)
+    for i in range(10):
+        assert not wd.observe(i, 0.1)
+    assert wd.observe(10, 1.0)               # 10x the EWMA
+    assert not wd.observe(11, 0.1)           # baseline not poisoned
+
+
+def test_serving_generates_tokens():
+    from repro.launch.serve import generate
+    r = generate("minitron-4b", smoke=True, batch=2, prompt_len=16, gen_tokens=6)
+    assert r.tokens.shape == (2, 6)
+    assert r.tokens_per_s > 0
+
+
+def test_paper_workflow_end_to_end():
+    """TPSS synth -> MSET2 train/surveil -> SPRT alarm -> measured scoping ->
+    surface fit -> shape recommendation (the whole Figure-1 loop)."""
+    from repro.core import (CellResult, Constraint, ContainerStress,
+                            RooflineTerms, fit_response_surface, recommend)
+    from repro.mset import SPRTParams, estimate, sprt, train as mset_train
+    from repro.tpss import TPSSParams, inject_anomaly, synthesize
+
+    key = jax.random.PRNGKey(0)
+    X = synthesize(key, TPSSParams(n_signals=12, n_obs=2048))
+    model = mset_train(X[:1536], n_memvec=96)
+    _, res_clean = estimate(model, X[1536:])
+    sigma = jnp.std(res_clean, 0)
+    mu = jnp.mean(res_clean, 0)
+
+    Xa = inject_anomaly(X[1536:], start=100, signal=5, drift_per_step=0.05)
+    _, res_a = estimate(model, Xa)
+    alarms, _, _ = sprt(res_a, sigma, SPRTParams(alpha=1e-4, beta=1e-4, m_shift=4.0),
+                        mu=mu)
+    post = np.argwhere(np.asarray(alarms)[100:, 5]).ravel()
+    assert len(post) > 0 and post[0] < 200
+
+    # measured scoping over a small grid + recommendation
+    def workload(params):
+        Xg = synthesize(jax.random.PRNGKey(1), TPSSParams(
+            n_signals=params["n_signals"], n_obs=512))
+        def run():
+            m = mset_train(Xg[:384], n_memvec=params["n_memvec"])
+            return estimate(m, Xg[384:])[1]
+        return run
+
+    cs = ContainerStress()
+    res = cs.run_measured(workload, {"n_signals": [8, 16], "n_memvec": [32, 64]},
+                          reps=1)
+    names, Xs, y = res.to_arrays()
+    surf = fit_response_surface(names, Xs, y, degree=1)
+    assert surf.predict({"n_signals": 12, "n_memvec": 48}) > 0
+
+    rows = [CellResult(params={}, shape_name="v5e-64",
+                       terms=RooflineTerms(0.01, 0.02, 0.005),
+                       analysis={"peak_memory_per_device": 1e9})]
+    rec = recommend(rows, Constraint(max_step_latency_s=0.1))
+    assert rec.shape is not None

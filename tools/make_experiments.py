@@ -1,0 +1,125 @@
+"""Generate the §Dry-run and §Roofline sections of EXPERIMENTS.md from artifacts.
+
+    PYTHONPATH=src python tools/make_experiments.py > /tmp/sections.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.core.report import fmt_si, fmt_time, markdown_table  # noqa: E402
+
+
+def load(mesh):
+    recs = {}
+    for f in sorted(glob.glob(f"artifacts/dryrun/{mesh}/*.json")):
+        r = json.load(open(f))
+        recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def dryrun_section():
+    single = load("pod16x16")
+    multi = load("pod2x16x16")
+    headers = ["arch", "shape", "16x16 compile", "mem/dev", "collectives (per-dev bytes by kind)",
+               "2x16x16 compile", "mem/dev"]
+    rows = []
+    for key in sorted(single):
+        r = single[key]
+        m = multi.get(key, {})
+        if r["status"] == "skip":
+            rows.append([key[0], key[1], "SKIP", "—", r["reason"], "SKIP", "—"])
+            continue
+        kinds = r.get("collective_bytes_by_kind", {})
+        chips = r.get("chips", 256)
+        kinds_s = ", ".join(f"{k}:{fmt_si(v/chips, 'B')}" for k, v in
+                            sorted(kinds.items(), key=lambda kv: -kv[1])) or "—"
+        rows.append([
+            key[0], key[1],
+            "OK" if r["status"] == "ok" else r["status"].upper(),
+            f"{r.get('peak_memory_per_device', 0)/2**30:.2f}GiB",
+            kinds_s,
+            "OK" if m.get("status") == "ok" else m.get("status", "—").upper(),
+            f"{m.get('peak_memory_per_device', 0)/2**30:.2f}GiB" if m.get("status") == "ok" else "—",
+        ])
+    return markdown_table(headers, rows)
+
+
+def roofline_section():
+    single = load("pod16x16")
+    headers = ["arch", "shape", "t_compute", "t_memory", "t_collective", "t_step",
+               "dominant", "MODEL_FLOPS", "useful ratio", "roofline frac"]
+    rows = []
+    for key in sorted(single):
+        r = single[key]
+        if r["status"] != "ok":
+            continue
+        rows.append([
+            key[0], key[1],
+            fmt_time(r["t_compute"]), fmt_time(r["t_memory"]),
+            fmt_time(r["t_collective"]), fmt_time(r["t_step"]), r["dominant"],
+            fmt_si(r.get("model_flops"), "F"),
+            f"{r['useful_flops_ratio']:.3f}" if r.get("useful_flops_ratio") else "—",
+            f"{(r.get('roofline_fraction') or 0)*100:.2f}%",
+        ])
+    return markdown_table(headers, rows)
+
+
+def perf_section():
+    """Baseline vs optimized per-cell table."""
+    base = load("pod16x16")
+    opt = {}
+    for f in glob.glob("artifacts/dryrun_opt/pod16x16/*.json"):
+        r = json.load(open(f))
+        opt[(r["arch"], r["shape"])] = r
+    headers = ["arch", "shape", "t_step base", "t_step opt", "speedup",
+               "useful base→opt", "roofline frac base→opt", "mem/dev base→opt"]
+    rows = []
+    for key in sorted(base):
+        b, o = base[key], opt.get(key)
+        if b["status"] != "ok" or not o or o["status"] != "ok":
+            continue
+        su = b["t_step"] / o["t_step"] if o["t_step"] else float("nan")
+        rows.append([
+            key[0], key[1], fmt_time(b["t_step"]), fmt_time(o["t_step"]),
+            f"{su:.2f}x",
+            f"{b.get('useful_flops_ratio') or 0:.3f}→{o.get('useful_flops_ratio') or 0:.3f}",
+            f"{(b.get('roofline_fraction') or 0)*100:.3f}%→{(o.get('roofline_fraction') or 0)*100:.3f}%",
+            f"{b['peak_memory_per_device']/2**30:.1f}→{o['peak_memory_per_device']/2**30:.1f}GiB",
+        ])
+    return markdown_table(headers, rows)
+
+
+def inject():
+    path = "EXPERIMENTS.md"
+    text = open(path).read()
+
+    def repl(tag, content):
+        nonlocal text
+        b, e = f"<!-- BEGIN GENERATED {tag} -->", f"<!-- END GENERATED {tag} -->"
+        i, j = text.index(b), text.index(e)
+        text = text[: i + len(b)] + "\n" + content + "\n" + text[j:]
+
+    repl("DRYRUN", dryrun_section())
+    repl("ROOFLINE", roofline_section())
+    try:
+        repl("PERF", perf_section())
+    except Exception as ex:
+        print(f"(perf table skipped: {ex})", file=sys.stderr)
+    open(path, "w").write(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    if "--inject" in sys.argv:
+        inject()
+    else:
+        print("## §Dry-run\n")
+        print(dryrun_section())
+        print("\n## §Roofline\n")
+        print(roofline_section())
