@@ -1,0 +1,76 @@
+"""Fleet-scaling sweep: policies x traces x catalog shapes.
+
+For each candidate shape, replicas of that shape serve the same trace under
+each autoscaling policy; the sweep surfaces which (shape, policy) pair meets
+the SLO cheapest — the fleet-level extension of the paper's per-shape scoping
+tables.
+
+    PYTHONPATH=src python benchmarks/fleet_scaling.py [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.report import markdown_table
+from repro.fleet import (default_policies, mset_scenario, simulate,
+                         standard_traces, summarize)
+
+
+def run(full: bool = False, scenario=None):
+    scenario = scenario or mset_scenario(n_signals=1024, n_memvec=4096,
+                                         fleet=8, slo_s=1.0)
+    shape_names = [r.shape_name for r in scenario.rows_at()]
+    if not full:
+        shape_names = shape_names[:4]
+    duration = 7200.0 if full else 1800.0
+    cold_start_s = 60.0
+    reports = []
+    for shape_name in shape_names:
+        service = scenario.service_for(shape_name)
+        # restrict scoping rows to the swept shape so the predictive policy's
+        # recommend() call sizes against it
+        rows = [r for r in scenario.rows if r.shape_name == shape_name]
+        mean_rate = 5.6 * service.max_throughput      # ~8 replicas at 70%
+        try:
+            policies = default_policies(
+                rows, scenario.constraint(), scenario.units_per_step,
+                static_replicas=7, cold_start_s=cold_start_s)
+        except ValueError:            # shape infeasible for the SLO
+            continue
+        for trace in standard_traces(mean_rate, duration, dt_s=5.0,
+                                     n_seeds=16 if full else 8):
+            for policy in policies:   # simulate() resets policy state
+                sim = simulate(trace, service, policy, slo_s=scenario.slo_s,
+                               cold_start_s=cold_start_s)
+                reports.append(summarize(sim))
+    return reports
+
+
+def best_per_trace(reports, min_attainment: float = 0.99) -> list:
+    best = {}
+    for r in reports:
+        if r.slo_attainment < min_attainment:
+            continue
+        if r.trace not in best or r.usd_per_hour < best[r.trace].usd_per_hour:
+            best[r.trace] = r
+    return [best[k] for k in sorted(best)]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    reports = run(full=args.full)
+    from repro.fleet import REPORT_HEADERS, comparison_table
+    print(comparison_table(reports))
+    print("\ncheapest (shape, policy) meeting >=99% SLO per trace:")
+    print(markdown_table(REPORT_HEADERS,
+                         [r.row() for r in best_per_trace(reports)]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,6 @@
 # ContainerStress — the paper's primary contribution: autonomous cloud-node
 # scoping via nested-loop Monte Carlo + compile-time roofline analysis.
-from repro.core.catalog import CATALOG, CloudShape, get_shape
+from repro.core.catalog import CATALOG, CloudShape, get_shape, register_shape
 from repro.core.cost_model import (HardwareSpec, RooflineTerms, V5E, dollar_cost,
                                    mfu, roofline)
 from repro.core.hlo_analysis import CompiledCost, analyze_compiled, parse_collectives
@@ -10,7 +10,8 @@ from repro.core.surfaces import (ResponseSurface, fit_response_surface,
                                  grid_to_matrix, render_ascii_surface)
 
 __all__ = [
-    "CATALOG", "CloudShape", "get_shape", "HardwareSpec", "RooflineTerms", "V5E",
+    "CATALOG", "CloudShape", "get_shape", "register_shape", "HardwareSpec",
+    "RooflineTerms", "V5E",
     "dollar_cost", "mfu", "roofline", "CompiledCost", "analyze_compiled",
     "parse_collectives", "Constraint", "Recommendation", "elasticity_plan",
     "recommend", "CellResult", "ContainerStress", "ScopingResult",

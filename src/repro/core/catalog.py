@@ -46,9 +46,26 @@ CATALOG: list[CloudShape] = [
     CloudShape("2x-v5e-256", (2, 16, 16), ("pod", "data", "model")),
 ]
 
+_BY_NAME: dict[str, CloudShape] = {s.name: s for s in CATALOG}
+
 
 def get_shape(name: str) -> CloudShape:
-    for s in CATALOG:
-        if s.name == name:
-            return s
-    raise KeyError(f"unknown cloud shape {name!r}; known: {[s.name for s in CATALOG]}")
+    try:
+        return _BY_NAME[name]
+    except KeyError:
+        raise KeyError(f"unknown cloud shape {name!r}; known: "
+                       f"{[s.name for s in CATALOG]}") from None
+
+
+def register_shape(shape: CloudShape, overwrite: bool = False) -> CloudShape:
+    """Add a custom shape to the catalog (e.g. fleet scenarios injecting
+    non-standard slices or alternate HardwareSpecs)."""
+    if shape.name in _BY_NAME and not overwrite:
+        raise ValueError(f"shape {shape.name!r} already registered "
+                         f"(pass overwrite=True to replace)")
+    if shape.name in _BY_NAME:
+        CATALOG[[s.name for s in CATALOG].index(shape.name)] = shape
+    else:
+        CATALOG.append(shape)
+    _BY_NAME[shape.name] = shape
+    return shape

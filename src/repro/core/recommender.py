@@ -7,6 +7,7 @@ pick the cheapest feasible CloudShape and produce an elasticity growth plan.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 from typing import Callable, Optional
 
@@ -23,6 +24,8 @@ class Constraint:
 
     def feasible(self, t_step: float, shape: CloudShape,
                  hbm_used: Optional[float] = None) -> bool:
+        if not (t_step > 0.0 and math.isfinite(t_step)):
+            return False    # zero/negative/NaN step time = untrustworthy probe
         if self.max_step_latency_s is not None and t_step > self.max_step_latency_s:
             return False
         if (self.min_throughput_per_s is not None

@@ -46,6 +46,22 @@ class CellResult:
             return self.terms.t_step
         return self.mean_s
 
+    def service_terms(self, units_per_step: float = 1.0) -> tuple:
+        """Split this cell's per-step cost into ``(t_fixed, t_per_unit)`` seconds
+        for queueing models: serving a batch of b units takes
+        ``t_fixed + b * t_per_unit``.
+
+        With roofline terms, weight-streaming (memory) and collective traffic are
+        batch-independent while compute scales with the batch; measured cells have
+        no decomposition, so the whole cost amortizes linearly.
+        """
+        if units_per_step <= 0:
+            raise ValueError(f"units_per_step must be positive, got {units_per_step}")
+        if self.terms is not None:
+            t_fixed = max(self.terms.t_memory, self.terms.t_collective)
+            return t_fixed, self.terms.t_compute / units_per_step
+        return 0.0, self.mean_s / units_per_step
+
 
 @dataclass
 class ScopingResult:

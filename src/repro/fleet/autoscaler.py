@@ -1,0 +1,172 @@
+"""Pluggable autoscaling policies.
+
+All policies are vectorized over Monte Carlo seeds: ``decide`` receives
+(n_seeds,) observation vectors and returns an (n_seeds,) replica target.
+
+* ``StaticPolicy``           — fixed fleet (the paper's one-shot scoping answer).
+* ``ReactivePolicy``         — ServerlessContainers-style utilization rules:
+  scale up above an upper bound, down below a lower bound, with a per-seed
+  cooldown; pays the cold start on every burst.
+* ``QueueProportionalPolicy``— targets enough replicas to absorb the current
+  arrival rate plus drain the backlog within ``drain_s``.
+* ``PredictivePolicy``       — forecasts the arrival rate one cold-start horizon
+  ahead and provisions for it; its *shape* is pre-picked by the scoping stack
+  (``recommend()`` over CellResult rows) and its capacity estimate comes from a
+  ``ResponseSurface`` fitted on the service batch time over the batch grid.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.recommender import Constraint, recommend
+from repro.core.surfaces import fit_response_surface
+from repro.fleet.workload import ServiceModel, service_model_from_cell
+
+_EPS = 1e-12
+
+
+class Policy:
+    """Base: stateless sizing against the bound service's capacity."""
+    name = "policy"
+    service: ServiceModel = None     # optional shape override (predictive)
+
+    def reset(self, n_seeds: int) -> None:
+        pass
+
+    def decide(self, t: int, obs) -> np.ndarray:
+        raise NotImplementedError
+
+
+def _replicas_for_rate(rate: np.ndarray, service: ServiceModel,
+                       headroom: float) -> np.ndarray:
+    """Replicas needed to serve ``rate`` req/s at <= ``headroom`` utilization."""
+    per = max(service.max_throughput * headroom, _EPS)
+    return np.ceil(np.maximum(rate, 0.0) / per)
+
+
+class StaticPolicy(Policy):
+    name = "static"
+
+    def __init__(self, n_replicas: int):
+        self.n = int(n_replicas)
+
+    def decide(self, t, obs):
+        return np.full_like(obs.replicas, self.n)
+
+
+class ReactivePolicy(Policy):
+    name = "reactive"
+
+    def __init__(self, upper: float = 0.8, lower: float = 0.3,
+                 scale_up_frac: float = 0.5, scale_down_frac: float = 0.25,
+                 cooldown_s: float = 60.0):
+        assert 0.0 <= lower < upper <= 1.0
+        self.upper, self.lower = upper, lower
+        self.up_frac, self.down_frac = scale_up_frac, scale_down_frac
+        self.cooldown_s = cooldown_s
+        self._last = None
+
+    def reset(self, n_seeds):
+        self._last = np.full(n_seeds, -np.inf)
+
+    def decide(self, t, obs):
+        total = obs.replicas + obs.in_flight
+        target = total.copy()
+        actionable = obs.t_s - self._last >= self.cooldown_s
+        # a fleet scaled to zero pins utilization at 0 and the upper-bound rule
+        # alone would never fire again — starvation overrides the cooldown
+        starved = (total < 1) & ((obs.queue >= 1) | (obs.arrival_rate > 0))
+        up = (actionable & (obs.utilization >= self.upper)) | starved
+        down = actionable & ~starved & (obs.utilization <= self.lower) \
+            & (obs.queue < 1)
+        target[up] = np.maximum(
+            total[up] + np.maximum(np.ceil(total[up] * self.up_frac), 1), 1)
+        target[down] = total[down] - np.maximum(
+            np.ceil(total[down] * self.down_frac), 1)
+        self._last[up | down] = obs.t_s
+        return target
+
+
+class QueueProportionalPolicy(Policy):
+    name = "queue-prop"
+
+    def __init__(self, drain_s: float = 30.0, headroom: float = 0.85):
+        self.drain_s = drain_s
+        self.headroom = headroom
+
+    def decide(self, t, obs):
+        demand = obs.arrival_rate + obs.queue / max(self.drain_s, obs.dt_s)
+        return _replicas_for_rate(demand, obs.service, self.headroom)
+
+
+class PredictivePolicy(Policy):
+    """Scoping-stack-driven: shape from ``recommend()``, capacity from a
+    ``ResponseSurface`` over the service batch time, replicas from a linear
+    forecast one cold-start horizon ahead."""
+    name = "predictive"
+
+    def __init__(self, rows, constraint: Constraint, units_per_step: float,
+                 horizon_s: float = 60.0, window_bins: int = 12,
+                 headroom: float = 0.85, max_batch: int = None):
+        ref = [r for r in rows
+               if float(r.params.get("batch", units_per_step)) == units_per_step]
+        self.recommendation = recommend(ref, constraint)
+        if self.recommendation.shape is None:
+            raise ValueError("predictive policy: no feasible shape "
+                             f"({self.recommendation.reason})")
+        shape_name = self.recommendation.shape.name
+        cell = next(r for r in ref if r.shape_name == shape_name)
+        self.service = service_model_from_cell(cell, units_per_step,
+                                               max_batch=max_batch)
+        # Provisioning capacity from a response surface over the batch
+        # dimension, fitted on the same fixed+linear service decomposition the
+        # simulator bills (``CellResult.service_terms``): exact on the scoped
+        # batch grid, interpolating anywhere else.
+        mine = [r for r in rows if r.shape_name == shape_name
+                and "batch" in r.params]
+        self.surface = None
+        if len({float(r.params["batch"]) for r in mine}) >= 3:
+            X = np.array([[float(r.params["batch"])] for r in mine])
+            y = np.array([sum(r.service_terms(1.0)) for r in mine])
+            self.surface = fit_response_surface(["batch"], X, y, degree=2)
+            mb = float(self.service.max_batch)
+            self._rate = mb / max(self.surface.predict({"batch": mb}), _EPS)
+        else:
+            self._rate = self.service.max_throughput
+        self.horizon_s = horizon_s
+        self.window_bins = max(int(window_bins), 2)
+        self.headroom = headroom
+        self._hist = None
+
+    def reset(self, n_seeds):
+        self._hist = np.zeros((self.window_bins, n_seeds))
+        self._n_obs = 0
+
+    def decide(self, t, obs):
+        self._hist = np.roll(self._hist, -1, axis=0)
+        self._hist[-1] = obs.arrival_rate
+        self._n_obs += 1
+        w = min(self._n_obs, self.window_bins)
+        H = self._hist[-w:]
+        if w >= 3:
+            x = np.arange(w) - (w - 1) / 2.0
+            slope = (x[:, None] * (H - H.mean(axis=0))).sum(axis=0) / (x ** 2).sum()
+            forecast = H[-1] + slope * (self.horizon_s / obs.dt_s)
+        else:
+            forecast = H[-1]
+        demand = np.maximum(forecast, obs.arrival_rate) \
+            + obs.queue / max(self.horizon_s, obs.dt_s)
+        per = max(self._rate * self.headroom, _EPS)
+        return np.ceil(np.maximum(demand, 0.0) / per)
+
+
+def default_policies(rows, constraint: Constraint, units_per_step: float,
+                     static_replicas: int, cold_start_s: float = 30.0) -> list:
+    """The four canonical policies, comparably configured."""
+    return [
+        StaticPolicy(static_replicas),
+        ReactivePolicy(cooldown_s=2 * cold_start_s),
+        QueueProportionalPolicy(),
+        PredictivePolicy(rows, constraint, units_per_step,
+                         horizon_s=2 * cold_start_s),
+    ]

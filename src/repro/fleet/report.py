@@ -1,0 +1,91 @@
+"""Fleet SLO/cost reporting: percentile latency, attainment, utilization, and
+dollar cost (via the core cost model) per policy, plus comparison tables."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.cost_model import dollar_cost
+from repro.core.report import fmt_time, markdown_table
+from repro.fleet.simulator import SimResult
+
+
+def weighted_percentile(values: np.ndarray, weights: np.ndarray,
+                        q: float) -> float:
+    """Percentile q in [0, 100] of ``values`` where each value counts
+    ``weights`` times (per-bin latency weighted by requests served)."""
+    v = np.asarray(values, float).ravel()
+    w = np.asarray(weights, float).ravel()
+    keep = w > 0
+    v, w = v[keep], w[keep]
+    if len(v) == 0:
+        return float("nan")
+    order = np.argsort(v)
+    v, w = v[order], w[order]
+    cdf = np.cumsum(w) / w.sum()
+    return float(v[np.searchsorted(cdf, q / 100.0, side="left").clip(0, len(v) - 1)])
+
+
+@dataclass(frozen=True)
+class FleetReport:
+    policy: str
+    trace: str
+    shape: str
+    slo_s: float
+    p50_s: float
+    p95_s: float
+    p99_s: float
+    slo_attainment: float       # served within SLO / all arrivals (drops violate)
+    mean_utilization: float
+    drop_rate: float
+    mean_replicas: float
+    usd_total: float            # mean over MC seeds, whole trace
+    usd_per_hour: float
+
+    def row(self) -> list:
+        return [self.policy, self.trace, self.shape,
+                fmt_time(self.p50_s), fmt_time(self.p99_s),
+                f"{self.slo_attainment * 100:.1f}%",
+                f"{self.mean_utilization * 100:.0f}%",
+                f"{self.drop_rate * 100:.2f}%",
+                f"{self.mean_replicas:.1f}",
+                f"${self.usd_per_hour:.2f}/hr"]
+
+
+REPORT_HEADERS = ["policy", "trace", "shape", "p50", "p99", "SLO", "util",
+                  "drop", "replicas", "cost"]
+
+
+def summarize(sim: SimResult) -> FleetReport:
+    served, lat = sim.served, sim.latency_s
+    total_arrived = sim.arrivals.sum()
+    ok = served * (lat <= sim.slo_s)
+    attainment = (float(ok.sum() / total_arrived) if total_arrived > 0
+                  else 1.0)      # no traffic = vacuously met
+    replica_bins = sim.replica_bins()
+    usd = dollar_cost(sim.dt_s, replica_bins, sim.service.shape.chips,
+                      sim.service.shape.hw)
+    hours = sim.trace.duration_s / 3600.0
+    util = sim.utilization[sim.replicas > 0]
+    return FleetReport(
+        policy=sim.policy_name,
+        trace=sim.trace.name,
+        shape=sim.service.shape.name,
+        slo_s=sim.slo_s,
+        p50_s=weighted_percentile(lat, served, 50),
+        p95_s=weighted_percentile(lat, served, 95),
+        p99_s=weighted_percentile(lat, served, 99),
+        slo_attainment=attainment,
+        mean_utilization=float(util.mean()) if util.size else 0.0,
+        drop_rate=float(sim.dropped.sum() / max(total_arrived, 1.0)),
+        mean_replicas=float(sim.replicas.mean()),
+        usd_total=usd,
+        usd_per_hour=usd / max(hours, 1e-12),
+    )
+
+
+def comparison_table(reports: list) -> str:
+    """Markdown policy-comparison table, grouped by trace then cost."""
+    rows = [r.row() for r in sorted(reports, key=lambda r: (r.trace, r.usd_per_hour))]
+    return markdown_table(REPORT_HEADERS, rows)

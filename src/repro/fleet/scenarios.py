@@ -1,0 +1,106 @@
+"""Fleet workload scenarios: scoping rows (CellResult per shape x batch) for the
+two serving paths the repo models, feeding ``recommend()`` and ServiceModels.
+
+* MSET surveillance service (``mset/service.py``): one request = one batch of
+  sensor observations estimated against the memory-vector model.
+* Transformer LM decode (``launch/serve.py``): one request = one decode step of
+  a batched generation loop.
+
+Rows are analytic rooflines (no compilation), so scenarios build in
+milliseconds and the simulator stays CPU-cheap.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.configs import get_config
+from repro.core.catalog import CATALOG, CloudShape
+from repro.core.cost_model import roofline
+from repro.core.recommender import Constraint
+from repro.core.scoping import CellResult
+from repro.fleet.workload import ServiceModel, service_model_from_cell
+from repro.launch.serve import decode_flops_bytes
+from repro.mset.service import service_collective_bytes, service_flops_bytes
+
+DEFAULT_BATCHES = (8, 32, 128, 512)
+
+
+@dataclass
+class Scenario:
+    """A serving workload scoped across shapes and batch sizes."""
+    name: str
+    rows: list                       # CellResult, params include "batch"
+    slo_s: float                     # per-request latency SLO
+    units_per_step: float            # reference serving batch
+    description: str = ""
+
+    def rows_at(self, batch: float = None) -> list:
+        b = self.units_per_step if batch is None else batch
+        return [r for r in self.rows if float(r.params["batch"]) == float(b)]
+
+    def constraint(self, service_frac: float = 0.5) -> Constraint:
+        """Feasibility bound for shape picking: a full batch must clear in a
+        fraction of the SLO (the rest is queueing headroom)."""
+        return Constraint(max_step_latency_s=self.slo_s * service_frac)
+
+    def service_for(self, shape_name: str, batch: float = None) -> ServiceModel:
+        b = self.units_per_step if batch is None else batch
+        cell = next(r for r in self.rows_at(b) if r.shape_name == shape_name)
+        return service_model_from_cell(cell, b, name=f"{self.name}:{shape_name}")
+
+    def cheapest_shape(self) -> str:
+        """Smallest-chip shape present (baseline for static fleets)."""
+        return min(self.rows_at(), key=lambda r: r.params["chips"]).shape_name
+
+
+def _row(shape: CloudShape, params: dict, flops: float, bytes_: float,
+         coll: float, hbm_per_device: float) -> CellResult:
+    terms = roofline(flops, bytes_, coll if shape.chips > 1 else 0.0, shape.chips)
+    return CellResult(params=dict(params, chips=shape.chips),
+                      shape_name=shape.name, terms=terms,
+                      analysis={"peak_memory_per_device": hbm_per_device})
+
+
+def mset_scenario(n_signals: int = 1024, n_memvec: int = 4096, fleet: int = 1,
+                  slo_s: float = 1.0, batches=DEFAULT_BATCHES,
+                  shapes=None) -> Scenario:
+    """Sensor-fleet surveillance: a request is one observation batch estimated
+    against ``fleet`` per-asset MSET models."""
+    shapes = CATALOG if shapes is None else shapes
+    model_bytes = 4.0 * (n_memvec ** 2 + 2 * n_memvec * n_signals) * fleet
+    rows = []
+    for shape in shapes:
+        for b in batches:
+            f, by = service_flops_bytes(n_signals, n_memvec, b)
+            coll = service_collective_bytes(n_signals, b)
+            hbm = model_bytes / shape.chips + 4.0 * b * n_signals
+            rows.append(_row(shape, {"n_signals": n_signals,
+                                     "n_memvec": n_memvec, "batch": b},
+                             f * fleet, by * fleet, coll * fleet, hbm))
+    return Scenario("mset-surveil", rows, slo_s, units_per_step=max(batches),
+                    description=f"{fleet} asset model(s), {n_signals} signals, "
+                                f"{n_memvec} memory vectors")
+
+
+def lm_decode_scenario(arch: str = "minitron-4b", ctx: int = 512,
+                       slo_s: float = 0.25, batches=DEFAULT_BATCHES,
+                       shapes=None, smoke: bool = False) -> Scenario:
+    """LM serving: a request is one decode step for one sequence; replicas run
+    continuous batching at up to the reference batch."""
+    shapes = CATALOG if shapes is None else shapes
+    cfg = get_config(arch, smoke=smoke)
+    counts = cfg.param_counts()
+    dt_bytes = 2 if cfg.dtype in ("bfloat16", "float16") else 4
+    rows = []
+    for shape in shapes:
+        for b in batches:
+            f, by = decode_flops_bytes(cfg, b, ctx=ctx)
+            # weights all-gathered/reduced once per step when model-sharded
+            coll = counts["active"] * dt_bytes * 0.25
+            kv = 2.0 * b * cfg.n_layers * cfg.n_kv_heads * cfg.head_dim * ctx * dt_bytes
+            hbm = (counts["total"] * dt_bytes + kv) / shape.chips
+            rows.append(_row(shape, {"arch": arch, "ctx": ctx, "batch": b},
+                             f, by, coll, hbm))
+    return Scenario(f"lm-{arch}", rows, slo_s, units_per_step=max(batches),
+                    description=f"{arch} decode @ ctx={ctx}, "
+                                f"{counts['total'] / 1e9:.1f}B params")

@@ -1,0 +1,112 @@
+"""Seeded synthetic request traces for the fleet simulator.
+
+Each generator produces a deterministic rate profile lambda(t) (requests/s per
+time bin) and Monte Carlo-samples Poisson arrival counts over ``n_seeds``
+independent seeds — the fleet-level analogue of the paper's nested-loop Monte
+Carlo over workload draws. The (n_seeds, n_bins) count array is what the
+vectorized simulator consumes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Trace:
+    """Monte Carlo arrival trace: ``arrivals[s, t]`` requests in bin t, seed s."""
+    name: str
+    dt_s: float
+    rate: np.ndarray        # (n_bins,) expected requests/s per bin
+    arrivals: np.ndarray    # (n_seeds, n_bins) sampled request counts
+
+    @property
+    def n_seeds(self) -> int:
+        return self.arrivals.shape[0]
+
+    @property
+    def n_bins(self) -> int:
+        return self.arrivals.shape[1]
+
+    @property
+    def duration_s(self) -> float:
+        return self.n_bins * self.dt_s
+
+    @property
+    def peak_rate(self) -> float:
+        return float(self.rate.max())
+
+    @property
+    def mean_rate(self) -> float:
+        return float(self.rate.mean())
+
+
+def _sample(name: str, rate: np.ndarray, dt_s: float, n_seeds: int,
+            seed: int) -> Trace:
+    rate = np.clip(np.asarray(rate, float), 0.0, None)
+    rng = np.random.default_rng(seed)
+    arrivals = rng.poisson(rate[None, :] * dt_s, size=(n_seeds, len(rate)))
+    return Trace(name, dt_s, rate, arrivals)
+
+
+def _bins(duration_s: float, dt_s: float) -> np.ndarray:
+    n = max(int(round(duration_s / dt_s)), 1)
+    return (np.arange(n) + 0.5) * dt_s
+
+
+def poisson_trace(rate_per_s: float, duration_s: float, dt_s: float = 1.0,
+                  n_seeds: int = 8, seed: int = 0) -> Trace:
+    """Steady-state load: constant lambda."""
+    t = _bins(duration_s, dt_s)
+    return _sample("poisson", np.full(len(t), rate_per_s), dt_s, n_seeds, seed)
+
+
+def diurnal_trace(mean_rate_per_s: float, duration_s: float, dt_s: float = 1.0,
+                  amplitude: float = 0.8, period_s: float = 86400.0,
+                  phase: float = 0.0, n_seeds: int = 8, seed: int = 0) -> Trace:
+    """Day/night sinusoid: lambda(t) = mean * (1 + A sin(2*pi*t/period + phase))."""
+    t = _bins(duration_s, dt_s)
+    rate = mean_rate_per_s * (1.0 + amplitude * np.sin(2 * np.pi * t / period_s + phase))
+    return _sample("diurnal", rate, dt_s, n_seeds, seed)
+
+
+def flash_crowd_trace(base_rate_per_s: float, duration_s: float, dt_s: float = 1.0,
+                      peak_mult: float = 8.0, t_burst_s: float = None,
+                      burst_width_s: float = None, n_seeds: int = 8,
+                      seed: int = 0) -> Trace:
+    """Flash crowd: baseline with a Gaussian burst peaking at ``peak_mult`` x base."""
+    t = _bins(duration_s, dt_s)
+    t0 = duration_s / 2 if t_burst_s is None else t_burst_s
+    w = duration_s / 12 if burst_width_s is None else burst_width_s
+    rate = base_rate_per_s * (1.0 + (peak_mult - 1.0) * np.exp(-0.5 * ((t - t0) / w) ** 2))
+    return _sample("flash-crowd", rate, dt_s, n_seeds, seed)
+
+
+def ramp_trace(rate0_per_s: float, rate1_per_s: float, duration_s: float,
+               dt_s: float = 1.0, n_seeds: int = 8, seed: int = 0) -> Trace:
+    """Linear growth (e.g. a launch ramping to steady state)."""
+    t = _bins(duration_s, dt_s)
+    rate = rate0_per_s + (rate1_per_s - rate0_per_s) * t / duration_s
+    return _sample("ramp", rate, dt_s, n_seeds, seed)
+
+
+def replay_trace(rates_per_s, dt_s: float = 1.0, n_seeds: int = 8, seed: int = 0,
+                 name: str = "replay") -> Trace:
+    """Replay a recorded per-bin rate profile (production traces, CSV columns...)."""
+    return _sample(name, np.asarray(rates_per_s, float), dt_s, n_seeds, seed)
+
+
+def standard_traces(mean_rate_per_s: float, duration_s: float, dt_s: float = 1.0,
+                    n_seeds: int = 8, seed: int = 0) -> list:
+    """The canonical evaluation set: steady, diurnal, flash crowd, ramp."""
+    return [
+        poisson_trace(mean_rate_per_s, duration_s, dt_s, n_seeds, seed),
+        diurnal_trace(mean_rate_per_s, duration_s, dt_s,
+                      period_s=duration_s, n_seeds=n_seeds, seed=seed + 1),
+        flash_crowd_trace(mean_rate_per_s / 2, duration_s, dt_s,
+                          burst_width_s=duration_s / 30,
+                          n_seeds=n_seeds, seed=seed + 2),
+        ramp_trace(mean_rate_per_s / 4, 2 * mean_rate_per_s, duration_s, dt_s,
+                   n_seeds=n_seeds, seed=seed + 3),
+    ]

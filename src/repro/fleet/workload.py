@@ -1,0 +1,66 @@
+"""Service models: per-replica request-serving behaviour derived from the
+scoping engine.
+
+A replica is one container of a given ``CloudShape`` running the workload. Its
+batch service time comes straight from a scoping ``CellResult`` via
+``CellResult.service_terms`` — fixed (weight-streaming / collective) seconds plus
+per-request compute seconds — so batching amortizes ``t_step`` exactly as the
+roofline predicts.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.catalog import CloudShape, get_shape
+from repro.core.scoping import CellResult
+
+
+@dataclass(frozen=True)
+class ServiceModel:
+    """One replica's queueing behaviour: serving b requests takes
+    ``t_fixed + b * t_per_unit`` seconds, up to ``max_batch`` per batch."""
+    name: str
+    shape: CloudShape
+    t_fixed: float
+    t_per_unit: float
+    max_batch: int
+
+    def batch_time(self, b) -> np.ndarray:
+        """Seconds to serve a batch of b requests (scalar or array)."""
+        return self.t_fixed + np.asarray(b, float) * self.t_per_unit
+
+    def throughput(self, b) -> np.ndarray:
+        """Requests/s of one replica running back-to-back batches of size b."""
+        b = np.asarray(b, float)
+        return b / np.maximum(self.batch_time(b), 1e-12)
+
+    @property
+    def max_throughput(self) -> float:
+        """Requests/s at full batch — the replica's capacity."""
+        return float(self.throughput(self.max_batch))
+
+    @property
+    def usd_per_replica_hour(self) -> float:
+        return self.shape.price_per_hour
+
+
+def service_model_from_cell(cell: CellResult, units_per_step: float,
+                            max_batch: int = None, name: str = None,
+                            shape: CloudShape = None) -> ServiceModel:
+    """Build a ServiceModel from one scoping row.
+
+    ``units_per_step`` is how many requests the scoped step batched (the cell's
+    batch dimension); ``max_batch`` defaults to it.
+    """
+    t_fixed, t_unit = cell.service_terms(units_per_step)
+    shape = shape if shape is not None else get_shape(cell.shape_name)
+    mb = int(max_batch if max_batch is not None else units_per_step)
+    return ServiceModel(
+        name=name or f"{cell.shape_name}",
+        shape=shape,
+        t_fixed=float(t_fixed),
+        t_per_unit=float(max(t_unit, 1e-12)),
+        max_batch=max(mb, 1),
+    )

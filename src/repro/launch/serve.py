@@ -31,6 +31,26 @@ def pad_cache(model, cache, batch: int, from_len: int, to_len: int):
     return jax.tree.map(pad, cache, specs, is_leaf=is_box)
 
 
+def decode_flops_bytes(cfg, batch: int, ctx: int = 512):
+    """Analytic per-decode-step cost of batched serving (one token for each of
+    ``batch`` sequences at context ``ctx``) — roofline feedstock for the fleet
+    scenarios.
+
+    FLOPs: 2 FLOPs/param on the *active* params per token, plus attention
+    against the KV cache. Bytes: every weight streamed once per step (the
+    decode-bandwidth wall) plus the KV cache read.
+    """
+    counts = cfg.param_counts()
+    dt_bytes = 2 if cfg.dtype in ("bfloat16", "float16") else 4
+    q_dim = max(cfg.n_heads, 0) * max(cfg.head_dim, 0)       # query heads
+    kv_dim = max(cfg.n_kv_heads, 0) * max(cfg.head_dim, 0)   # cached heads
+    flops = 2.0 * counts["active"] * batch
+    flops += 4.0 * batch * cfg.n_layers * q_dim * ctx        # QK^T + AV
+    bytes_ = counts["total"] * dt_bytes
+    bytes_ += 2.0 * batch * cfg.n_layers * kv_dim * ctx * dt_bytes
+    return flops, bytes_
+
+
 @dataclass
 class GenResult:
     tokens: np.ndarray

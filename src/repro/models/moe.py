@@ -16,6 +16,7 @@ Experts are padded to a multiple of the model-axis size when necessary
 """
 from __future__ import annotations
 
+import inspect
 import math
 from functools import partial
 from typing import Optional
@@ -23,7 +24,19 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax import shard_map
+try:                                     # jax >= 0.5 exports it at top level
+    from jax import shard_map as _shard_map
+except ImportError:                      # older jax: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+if "check_vma" in inspect.signature(_shard_map).parameters:
+    shard_map = _shard_map
+else:
+    def shard_map(*args, **kw):
+        """Compat shim: older jax calls the replication check ``check_rep``."""
+        if "check_vma" in kw:
+            kw["check_rep"] = kw.pop("check_vma")
+        return _shard_map(*args, **kw)
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig

@@ -52,6 +52,23 @@ def make_service(model: MSETModel, mesh: Mesh, kind: Optional[str] = None):
     return estimate
 
 
+def service_flops_bytes(n_signals: int, n_memvec: int, batch: int):
+    """Analytic per-call cost of ``_estimate_sharded`` on a batch of
+    observations: similarity kernel (K = sim(D, X)), weight solve (W = Ginv K),
+    reconstruction (Xhat = W^T D). Feeds the fleet scenario's roofline rows."""
+    m, n, b = n_memvec, n_signals, batch
+    flops = 2.0 * m * b * n + 2.0 * m * m * b + 2.0 * b * m * n
+    bytes_ = 4.0 * (m * n + m * m        # D, Ginv (weight streaming)
+                    + 3 * b * n          # X in, Xhat + residual out
+                    + 2 * m * b)         # K, W intermediates
+    return flops, bytes_
+
+
+def service_collective_bytes(n_signals: int, batch: int) -> float:
+    """All-reduce traffic of the x_hat contraction over the sharded m axis."""
+    return 2.0 * 4.0 * batch * n_signals   # ring all-reduce ~ 2x payload
+
+
 def abstract_service_inputs(n_signals: int, n_memvec: int, batch: int):
     """ShapeDtypeStructs for dry-run scoping of the MSET service."""
     return {

@@ -1,0 +1,201 @@
+"""Fleet subsystem: traces, service models, simulator, policies, reports."""
+import numpy as np
+import pytest
+
+from repro.core import (CellResult, CloudShape, Constraint, RooflineTerms,
+                        get_shape, recommend, register_shape)
+from repro.fleet import (PredictivePolicy, QueueProportionalPolicy,
+                         ReactivePolicy, StaticPolicy, comparison_table,
+                         flash_crowd_trace, mset_scenario, poisson_trace,
+                         ramp_trace, replay_trace, service_model_from_cell,
+                         simulate, standard_traces, summarize,
+                         weighted_percentile)
+
+
+def _cell(shape="v5e-4", t_comp=0.4, t_mem=0.1, t_coll=0.05, batch=64):
+    return CellResult(params={"batch": batch, "chips": get_shape(shape).chips},
+                      shape_name=shape,
+                      terms=RooflineTerms(t_comp, t_mem, t_coll),
+                      analysis={"peak_memory_per_device": 1e9})
+
+
+def _service(**kw):
+    return service_model_from_cell(_cell(**kw), units_per_step=kw.get("batch", 64))
+
+
+# ---------------------------- traces ----------------------------------------
+
+def test_trace_determinism_under_fixed_seed():
+    a = poisson_trace(100.0, 600.0, dt_s=5.0, n_seeds=4, seed=7)
+    b = poisson_trace(100.0, 600.0, dt_s=5.0, n_seeds=4, seed=7)
+    assert np.array_equal(a.arrivals, b.arrivals)
+    c = poisson_trace(100.0, 600.0, dt_s=5.0, n_seeds=4, seed=8)
+    assert not np.array_equal(a.arrivals, c.arrivals)
+
+
+def test_trace_shapes_and_rates():
+    tr = ramp_trace(10.0, 100.0, 300.0, dt_s=5.0, n_seeds=3, seed=0)
+    assert tr.arrivals.shape == (3, 60)
+    assert tr.rate[0] < tr.rate[-1]
+    assert tr.peak_rate <= 100.0 and tr.mean_rate > 10.0
+    fl = flash_crowd_trace(10.0, 600.0, peak_mult=8.0, n_seeds=2, seed=0)
+    assert fl.peak_rate > 5 * 10.0
+    assert len(standard_traces(50.0, 300.0, n_seeds=2)) == 4
+    assert all(t.n_seeds == 2 for t in standard_traces(50.0, 300.0, n_seeds=2))
+
+
+# ---------------------------- service model ---------------------------------
+
+def test_service_model_amortizes_batching():
+    svc = _service()
+    # fixed term = max(t_mem, t_coll), unit term = t_comp / batch
+    assert svc.t_fixed == pytest.approx(0.1)
+    assert svc.t_per_unit == pytest.approx(0.4 / 64)
+    assert svc.batch_time(64) == pytest.approx(0.5)
+    # throughput strictly improves with batch size
+    th = svc.throughput(np.array([1, 8, 64]))
+    assert th[0] < th[1] < th[2]
+    assert svc.max_throughput == pytest.approx(64 / 0.5)
+
+
+def test_service_terms_measured_cell_and_validation():
+    measured = CellResult(params={}, mean_s=0.2)
+    assert measured.service_terms(10) == (0.0, pytest.approx(0.02))
+    with pytest.raises(ValueError):
+        measured.service_terms(0)
+
+
+# ---------------------------- simulator -------------------------------------
+
+def test_simulator_deterministic_and_conserves_requests():
+    tr = poisson_trace(500.0, 600.0, dt_s=5.0, n_seeds=4, seed=3)
+    svc = _service()
+    sims = [simulate(tr, svc, StaticPolicy(8), slo_s=2.0, cold_start_s=30.0,
+                     max_queue=1e4) for _ in range(2)]
+    for k in ("served", "dropped", "queue", "replicas", "latency_s"):
+        assert np.array_equal(getattr(sims[0], k), getattr(sims[1], k))
+    s = sims[0]
+    total = s.served.sum(axis=1) + s.dropped.sum(axis=1) + s.queue[:, -1]
+    assert np.allclose(total, s.arrivals.sum(axis=1))
+
+
+def test_underprovisioned_static_fleet_misses_slo():
+    svc = _service()
+    rate = 6 * svc.max_throughput
+    tr = poisson_trace(rate, 900.0, dt_s=5.0, n_seeds=2, seed=0)
+    good = summarize(simulate(tr, svc, StaticPolicy(8), slo_s=2.0))
+    bad = summarize(simulate(tr, svc, StaticPolicy(3), slo_s=2.0))
+    assert good.slo_attainment > 0.95
+    assert bad.slo_attainment < 0.5          # overloaded: queue diverges
+    assert bad.p99_s > good.p99_s
+    assert bad.usd_per_hour < good.usd_per_hour
+
+
+def test_cold_start_delays_scale_up():
+    svc = _service()
+    tr = poisson_trace(6 * svc.max_throughput, 600.0, dt_s=5.0, n_seeds=2, seed=1)
+    pol = QueueProportionalPolicy()
+    fast = simulate(tr, svc, pol, slo_s=2.0, cold_start_s=0.0,
+                    initial_replicas=1)
+    slow = simulate(tr, svc, QueueProportionalPolicy(), slo_s=2.0,
+                    cold_start_s=120.0, initial_replicas=1)
+    # with a long cold start the backlog peak is strictly worse
+    assert slow.queue.max() > fast.queue.max()
+
+
+def test_reactive_recovers_from_zero_replicas():
+    svc = _service()
+    # an idle trough lets the down rule reach zero replicas; the starvation
+    # override must bring the fleet back once traffic returns
+    rates = np.concatenate([np.zeros(100), np.full(100, 4 * svc.max_throughput)])
+    tr = replay_trace(rates, dt_s=5.0, n_seeds=2, seed=0)
+    sim = simulate(tr, svc, ReactivePolicy(cooldown_s=30.0), slo_s=2.0,
+                   cold_start_s=30.0, initial_replicas=2)
+    assert sim.served[:, -50:].sum() > 0
+    assert sim.replicas[:, -1].min() >= 1
+
+
+def test_cold_starting_replicas_are_billed():
+    svc = _service()
+    tr = poisson_trace(8 * svc.max_throughput, 600.0, dt_s=5.0, n_seeds=2, seed=5)
+    sim = simulate(tr, svc, QueueProportionalPolicy(), slo_s=2.0,
+                   cold_start_s=120.0, initial_replicas=1)
+    # scale-ups spend bins in cold start: billed strictly exceeds ready
+    assert sim.billed_replicas.sum() > sim.replicas.sum()
+    assert sim.replica_bins() == pytest.approx(
+        sim.billed_replicas.sum(axis=1).mean())
+
+
+def test_reactive_policy_scales_with_load():
+    svc = _service()
+    base = 2 * svc.max_throughput
+    tr = flash_crowd_trace(base, 1800.0, dt_s=5.0, peak_mult=6.0,
+                           n_seeds=2, seed=2)
+    sim = simulate(tr, svc, ReactivePolicy(cooldown_s=30.0), slo_s=2.0,
+                   cold_start_s=30.0)
+    assert sim.replicas.max() > sim.replicas[:, 0].max()   # grew into the burst
+    assert sim.replicas[:, -1].max() < sim.replicas.max()  # shrank after
+
+
+# ---------------------------- predictive + recommend ------------------------
+
+def test_predictive_policy_shape_comes_from_recommend():
+    sc = mset_scenario(n_signals=256, n_memvec=1024, slo_s=1.0)
+    pol = PredictivePolicy(sc.rows, sc.constraint(), sc.units_per_step)
+    rec = recommend(sc.rows_at(), sc.constraint())
+    assert pol.recommendation.shape.name == rec.shape.name
+    assert pol.service.shape.name == rec.shape.name
+    assert pol.surface is not None           # t_step(batch) surface fitted
+    svc = sc.service_for(rec.shape.name)
+    tr = poisson_trace(3 * svc.max_throughput, 600.0, dt_s=5.0,
+                       n_seeds=2, seed=4)
+    rep = summarize(simulate(tr, svc, pol, slo_s=sc.slo_s))
+    assert rep.shape == rec.shape.name
+    assert rep.slo_attainment > 0.9
+
+
+def test_predictive_policy_raises_without_feasible_shape():
+    sc = mset_scenario(n_signals=256, n_memvec=1024)
+    with pytest.raises(ValueError):
+        PredictivePolicy(sc.rows, Constraint(max_step_latency_s=1e-15),
+                         sc.units_per_step)
+
+
+# ---------------------------- report ----------------------------------------
+
+def test_weighted_percentile():
+    v = np.array([1.0, 2.0, 10.0])
+    w = np.array([98.0, 1.0, 1.0])
+    assert weighted_percentile(v, w, 50) == 1.0
+    assert weighted_percentile(v, w, 99.5) == 10.0
+    assert np.isnan(weighted_percentile(v, np.zeros(3), 50))
+
+
+def test_comparison_table_renders():
+    svc = _service()
+    tr = poisson_trace(2 * svc.max_throughput, 300.0, dt_s=5.0, n_seeds=2, seed=0)
+    reps = [summarize(simulate(tr, svc, StaticPolicy(4), slo_s=2.0)),
+            summarize(simulate(tr, svc, QueueProportionalPolicy(), slo_s=2.0))]
+    txt = comparison_table(reps)
+    assert "| policy |" in txt and "static" in txt and "queue-prop" in txt
+
+
+# ---------------------------- catalog registration --------------------------
+
+def test_register_shape_roundtrip():
+    s = CloudShape("test-fleet-2", (1, 2), ("data", "model"))
+    register_shape(s)
+    try:
+        assert get_shape("test-fleet-2") is s
+        with pytest.raises(ValueError):
+            register_shape(CloudShape("test-fleet-2", (2, 1), ("data", "model")))
+        register_shape(CloudShape("test-fleet-2", (2, 1), ("data", "model")),
+                       overwrite=True)
+        assert get_shape("test-fleet-2").mesh_shape == (2, 1)
+    finally:
+        from repro.core import catalog
+        catalog.CATALOG[:] = [c for c in catalog.CATALOG
+                              if c.name != "test-fleet-2"]
+        catalog._BY_NAME.pop("test-fleet-2", None)
+    with pytest.raises(KeyError):
+        get_shape("test-fleet-2")

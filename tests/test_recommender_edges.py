@@ -1,0 +1,50 @@
+"""Constraint / recommender edge cases (degenerate probes, HBM bound,
+elasticity plans with infeasible regions)."""
+import numpy as np
+import pytest
+
+from repro.core import (CellResult, CloudShape, Constraint, RooflineTerms,
+                        elasticity_plan, get_shape)
+from repro.core.surfaces import fit_response_surface
+
+SHAPE = get_shape("v5e-4")
+
+
+def test_feasible_rejects_degenerate_step_times():
+    c = Constraint(max_step_latency_s=10.0)
+    assert not c.feasible(0.0, SHAPE)
+    assert not c.feasible(-1.0, SHAPE)
+    assert not c.feasible(float("nan"), SHAPE)
+    assert not c.feasible(float("inf"), SHAPE)
+    assert c.feasible(1e-9, SHAPE)
+
+
+def test_feasible_hbm_bound():
+    c = Constraint()
+    at_limit = SHAPE.hw.hbm_per_chip
+    assert c.feasible(0.1, SHAPE, hbm_used=at_limit)
+    assert not c.feasible(0.1, SHAPE, hbm_used=at_limit * 1.001)
+    assert c.feasible(0.1, SHAPE, hbm_used=None)
+
+
+def test_feasible_throughput_and_price():
+    c = Constraint(min_throughput_per_s=100.0, units_per_step=50.0)
+    assert c.feasible(0.4, SHAPE)           # 125 units/s
+    assert not c.feasible(1.0, SHAPE)       # 50 units/s
+    cp = Constraint(max_usd_per_hour=SHAPE.price_per_hour - 0.01)
+    assert not cp.feasible(0.1, SHAPE)
+
+
+def test_elasticity_plan_marks_infeasible_growth_values():
+    # surface: t grows linearly with n; only small n meets the latency bound
+    X = np.array([[n] for n in (1.0, 2.0, 4.0, 8.0, 16.0)])
+    y = X[:, 0] * 0.1
+    shapes = [get_shape("v5e-4"), get_shape("v5e-8")]
+    surfaces = {s.name: fit_response_surface(["n"], X, y, degree=1)
+                for s in shapes}
+    plan = elasticity_plan(surfaces, shapes, "n", [2.0, 4.0, 1e6],
+                           base_params={}, constraint=Constraint(
+                               max_step_latency_s=0.5))
+    assert plan[0][1] == "v5e-4"            # cheapest feasible
+    assert plan[-1][1] is None and plan[-1][2] is None   # no feasible shape
+    assert [v for v, *_ in plan] == [2.0, 4.0, 1e6]
