@@ -1,23 +1,55 @@
-"""Fleet-scaling sweep: policies x traces x catalog shapes.
+"""Fleet-scaling sweep: policies x traces x fleet configurations (homogeneous
+per-shape fleets AND mixed-shape fleets), under per-instance-type cloud quotas.
 
-For each candidate shape, replicas of that shape serve the same trace under
-each autoscaling policy; the sweep surfaces which (shape, policy) pair meets
-the SLO cheapest — the fleet-level extension of the paper's per-shape scoping
-tables.
+For each homogeneous candidate shape, replicas of that shape serve the same
+trace under each autoscaling policy; a mixed v5e-4+v5e-16 fleet runs the
+heterogeneous predictive policy against the same traces. Every pool is capped
+at ``QUOTA`` replicas (clouds limit instance counts per type), which is what
+makes the comparison honest: a flash crowd can outgrow the small shape's
+quota, and a big-shape-only fleet overpays at baseline — the mixed fleet
+splits the difference. Results land in ``BENCH_fleet.json`` (CI artifact) so
+the perf/cost trajectory is tracked across PRs.
 
-    PYTHONPATH=src python benchmarks/fleet_scaling.py [--full]
+    PYTHONPATH=src python benchmarks/fleet_scaling.py [--full] [--out PATH]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
+import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core.report import markdown_table
-from repro.fleet import (default_policies, mset_scenario, simulate,
+from repro.fleet import (HeterogeneousPredictivePolicy, comparison_table,
+                         cost_efficiency_table, default_policies,
+                         mset_scenario, simulate, simulate_fleet,
                          standard_traces, summarize)
+
+QUOTA = 16              # max replicas per pool (per-instance-type quota)
+COLD_START_S = 60.0
+MIXED_SHAPES = ("v5e-4", "v5e-16")
+
+
+def _record(report, sim, wall_s):
+    return {
+        "policy": report.policy,
+        "trace": report.trace,
+        "shapes": report.shape,
+        "pools": [{"shape": p.service.shape.name,
+                   "cold_start_s": p.cold_start_s,
+                   "max_replicas": p.max_replicas}
+                  for p in sim.fleet.pools],
+        "slo_s": report.slo_s,
+        "slo_attainment": report.slo_attainment,
+        "p50_s": report.p50_s,
+        "p99_s": report.p99_s,
+        "drop_rate": report.drop_rate,
+        "mean_billed_replicas": report.mean_replicas,
+        "usd_per_hour": report.usd_per_hour,
+        "wall_clock_s": wall_s,
+    }
 
 
 def run(full: bool = False, scenario=None):
@@ -26,50 +58,81 @@ def run(full: bool = False, scenario=None):
     shape_names = [r.shape_name for r in scenario.rows_at()]
     if not full:
         shape_names = shape_names[:4]
-    duration = 7200.0 if full else 1800.0
-    cold_start_s = 60.0
-    reports = []
+    # standard_traces scales the flash-crowd burst width as duration/30; keep
+    # it a few cold-start periods wide, or no policy can outrun the burst
+    duration = 7200.0 if full else 3600.0
+    n_seeds = 16 if full else 8
+    base_thr = scenario.service_for(scenario.cheapest_shape()).max_throughput
+    # ~9 small-shape replicas of sustained demand: the flash-crowd peak
+    # (4x mean) then needs ~36 — past the small shapes' quota
+    mean_rate = 9.0 * base_thr
+    reports, records = [], []
+
+    def _run(trace, make_sim):
+        t0 = time.perf_counter()
+        sim = make_sim(trace)
+        wall = time.perf_counter() - t0
+        rep = summarize(sim)
+        reports.append(rep)
+        records.append(_record(rep, sim, wall))
+
     for shape_name in shape_names:
         service = scenario.service_for(shape_name)
         # restrict scoping rows to the swept shape so the predictive policy's
         # recommend() call sizes against it
         rows = [r for r in scenario.rows if r.shape_name == shape_name]
-        mean_rate = 5.6 * service.max_throughput      # ~8 replicas at 70%
         try:
             policies = default_policies(
                 rows, scenario.constraint(), scenario.units_per_step,
-                static_replicas=7, cold_start_s=cold_start_s)
+                static_replicas=min(
+                    int(mean_rate / (0.85 * service.max_throughput)) + 1,
+                    QUOTA),
+                cold_start_s=COLD_START_S)
         except ValueError:            # shape infeasible for the SLO
             continue
         for trace in standard_traces(mean_rate, duration, dt_s=5.0,
-                                     n_seeds=16 if full else 8):
+                                     n_seeds=n_seeds):
             for policy in policies:   # simulate() resets policy state
-                sim = simulate(trace, service, policy, slo_s=scenario.slo_s,
-                               cold_start_s=cold_start_s)
-                reports.append(summarize(sim))
-    return reports
+                _run(trace, lambda tr, p=policy, s=service: simulate(
+                    tr, s, p, slo_s=scenario.slo_s,
+                    cold_start_s=COLD_START_S, max_replicas=QUOTA))
 
-
-def best_per_trace(reports, min_attainment: float = 0.99) -> list:
-    best = {}
-    for r in reports:
-        if r.slo_attainment < min_attainment:
-            continue
-        if r.trace not in best or r.usd_per_hour < best[r.trace].usd_per_hour:
-            best[r.trace] = r
-    return [best[k] for k in sorted(best)]
+    # the mixed fleet: fine-grained baseline + coarse burst capacity
+    fleet = scenario.fleet_for(list(MIXED_SHAPES), cold_start_s=COLD_START_S,
+                               max_replicas=QUOTA)
+    hetero = HeterogeneousPredictivePolicy(
+        scenario.rows, scenario.constraint(), scenario.units_per_step, fleet,
+        horizon_s=2 * COLD_START_S)
+    for trace in standard_traces(mean_rate, duration, dt_s=5.0,
+                                 n_seeds=n_seeds):
+        _run(trace, lambda tr: simulate_fleet(tr, fleet, hetero,
+                                              slo_s=scenario.slo_s))
+    return reports, records
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default="BENCH_fleet.json",
+                    help="JSON results path (CI uploads this artifact)")
     args = ap.parse_args()
-    reports = run(full=args.full)
-    from repro.fleet import REPORT_HEADERS, comparison_table
+    t0 = time.perf_counter()
+    reports, records = run(full=args.full)
+    bench = {
+        "benchmark": "fleet_scaling",
+        "full": args.full,
+        "quota_per_pool": QUOTA,
+        "cold_start_s": COLD_START_S,
+        "total_wall_clock_s": time.perf_counter() - t0,
+        "records": records,
+    }
+    with open(args.out, "w") as f:
+        json.dump(bench, f, indent=2)
     print(comparison_table(reports))
-    print("\ncheapest (shape, policy) meeting >=99% SLO per trace:")
-    print(markdown_table(REPORT_HEADERS,
-                         [r.row() for r in best_per_trace(reports)]))
+    print(f"\ncheapest fleet meeting >=99% SLO per trace "
+          f"(quota {QUOTA} replicas/pool):")
+    print(cost_efficiency_table(reports))
+    print(f"\nwrote {len(records)} records to {args.out}")
 
 
 if __name__ == "__main__":

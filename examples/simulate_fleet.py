@@ -1,14 +1,18 @@
-"""Capacity planning for live traffic: run the four autoscaling policies over
+"""Capacity planning for live traffic: run the autoscaling policies over
 synthetic traces for both serving scenarios and compare SLO vs dollar cost.
 
 The scoping stack picks the shape (the predictive policy calls ``recommend()``
 over roofline rows); the fleet simulator then answers what that choice costs
-under steady, diurnal, flash-crowd, and ramp arrivals.
+under steady, diurnal, flash-crowd, and ramp arrivals. A mixed-shape fleet
+(fine-grained baseline pool + coarse burst pool, driven by the heterogeneous
+predictive policy) rides along in the same table — latencies are exact
+per-request FIFO sojourns from the cohort model, not fluid estimates.
 
     PYTHONPATH=src python examples/simulate_fleet.py
 """
-from repro.fleet import (comparison_table, default_policies, lm_decode_scenario,
-                         mset_scenario, simulate, standard_traces, summarize)
+from repro.fleet import (HeterogeneousPredictivePolicy, comparison_table,
+                         default_policies, lm_decode_scenario, mset_scenario,
+                         simulate, simulate_fleet, standard_traces, summarize)
 
 
 def run_scenario(scenario, mean_rate: float, duration_s: float = 3600.0,
@@ -32,12 +36,25 @@ def run_scenario(scenario, mean_rate: float, duration_s: float = 3600.0,
     import math
     policies[0].n = max(math.ceil(mean_rate / (service.max_throughput * 0.85)), 1)
 
+    # mixed fleet: baseline pool of the cheapest shape, burst pool two rungs up
+    shapes = sorted({r.shape_name for r in scenario.rows_at()},
+                    key=lambda s: scenario.service_for(s).shape.chips)
+    mixed_names = [shapes[0], shapes[min(2, len(shapes) - 1)]]
+    fleet = scenario.fleet_for(mixed_names, cold_start_s=cold_start_s)
+    hetero = HeterogeneousPredictivePolicy(rows, constraint,
+                                           scenario.units_per_step, fleet,
+                                           horizon_s=2 * cold_start_s)
+    print(f"mixed fleet: {fleet.shape_label()} (drain order "
+          f"{[fleet.pools[i].label for i in fleet.drain_order()]})")
+
     reports = []
     for trace in standard_traces(mean_rate, duration_s, dt_s, n_seeds=n_seeds):
         for policy in policies:
             sim = simulate(trace, service, policy, slo_s=scenario.slo_s,
                            cold_start_s=cold_start_s)
             reports.append(summarize(sim))
+        reports.append(summarize(
+            simulate_fleet(trace, fleet, hetero, slo_s=scenario.slo_s)))
     print(comparison_table(reports))
     return reports
 

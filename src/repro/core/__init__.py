@@ -4,7 +4,9 @@ from repro.core.catalog import CATALOG, CloudShape, get_shape, register_shape
 from repro.core.cost_model import (HardwareSpec, RooflineTerms, V5E, dollar_cost,
                                    mfu, roofline)
 from repro.core.hlo_analysis import CompiledCost, analyze_compiled, parse_collectives
-from repro.core.recommender import Constraint, Recommendation, elasticity_plan, recommend
+from repro.core.recommender import (Constraint, Recommendation,
+                                    elasticity_plan, feasible_ranking,
+                                    recommend)
 from repro.core.scoping import CellResult, ContainerStress, ScopingResult
 from repro.core.surfaces import (ResponseSurface, fit_response_surface,
                                  grid_to_matrix, render_ascii_surface)
@@ -14,7 +16,7 @@ __all__ = [
     "RooflineTerms", "V5E",
     "dollar_cost", "mfu", "roofline", "CompiledCost", "analyze_compiled",
     "parse_collectives", "Constraint", "Recommendation", "elasticity_plan",
-    "recommend", "CellResult", "ContainerStress", "ScopingResult",
+    "feasible_ranking", "recommend", "CellResult", "ContainerStress", "ScopingResult",
     "ResponseSurface", "fit_response_surface", "grid_to_matrix",
     "render_ascii_surface",
 ]

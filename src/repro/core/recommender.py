@@ -48,24 +48,46 @@ class Recommendation:
     reason: str = ""
 
 
+def _rank_key(entry):
+    # (price, t_step, chips, name): a total order even when two shapes tie on
+    # price AND step time — frozen CloudShape itself is unorderable, so a bare
+    # tuple sort would raise TypeError on duplicate-cost rows.
+    price, t, shape = entry
+    return (price, t, shape.chips, shape.name)
+
+
+def feasible_ranking(rows, constraint: Constraint) -> list:
+    """Feasible ``(price_per_hour, t_step, CloudShape)`` rows, cheapest first.
+
+    This is the ordering ``recommend()`` picks from; heterogeneous fleet
+    policies reuse it to split pools into baseline (head of the ranking) and
+    burst capacity (the rest)."""
+    feasible = []
+    for r in rows:
+        shape = get_shape(r.shape_name)
+        t = r.terms.t_step
+        hbm = (r.analysis or {}).get("peak_memory_per_device")
+        if constraint.feasible(t, shape, hbm):
+            feasible.append((shape.price_per_hour, t, shape))
+    feasible.sort(key=_rank_key)
+    return feasible
+
+
 def recommend(rows, constraint: Constraint) -> Recommendation:
     """rows: CellResult list from ContainerStress.run_analytic for ONE use case
     across multiple shapes."""
     ranking = []
-    feasible = []
     for r in rows:
         shape = get_shape(r.shape_name)
         t = r.terms.t_step
         hbm = (r.analysis or {}).get("peak_memory_per_device")
         ok = constraint.feasible(t, shape, hbm)
         ranking.append((shape.name, t, shape.price_per_hour, ok))
-        if ok:
-            feasible.append((shape.price_per_hour, t, shape))
     ranking.sort(key=lambda x: x[2])
+    feasible = feasible_ranking(rows, constraint)
     if not feasible:
         return Recommendation(None, None, None, ranking,
                               reason="no catalog shape satisfies the constraint")
-    feasible.sort()
     price, t, shape = feasible[0]
     return Recommendation(shape, t, price, ranking,
                           reason=f"cheapest feasible shape ({shape.chips} chips)")

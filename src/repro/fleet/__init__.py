@@ -1,24 +1,33 @@
 # Fleet layer: what happens to a recommended Shape under live traffic.
-# traces -> queueing simulation -> scaling policy -> SLO/cost report, closing
-# the loop from the paper's Monte Carlo cost surfaces to fleet operating cost.
-from repro.fleet.autoscaler import (Policy, PredictivePolicy,
-                                    QueueProportionalPolicy, ReactivePolicy,
-                                    StaticPolicy, default_policies)
-from repro.fleet.report import (REPORT_HEADERS, FleetReport, comparison_table,
+# traces -> queueing simulation (homogeneous or mixed-shape pools, exact
+# per-request FIFO latency via the cohort model) -> scaling policy -> SLO/cost
+# report, closing the loop from the paper's Monte Carlo cost surfaces to fleet
+# operating cost.
+from repro.fleet.autoscaler import (HeterogeneousPredictivePolicy, Policy,
+                                    PredictivePolicy, QueueProportionalPolicy,
+                                    ReactivePolicy, StaticPolicy,
+                                    default_policies)
+from repro.fleet.cohort import CohortMetrics, cohort_metrics, row_searchsorted
+from repro.fleet.report import (REPORT_HEADERS, FleetReport, best_per_trace,
+                                comparison_table, cost_efficiency_table,
                                 summarize, weighted_percentile)
 from repro.fleet.scenarios import Scenario, lm_decode_scenario, mset_scenario
-from repro.fleet.simulator import FleetObs, SimResult, simulate
+from repro.fleet.simulator import (FleetConfig, FleetObs, PoolConfig,
+                                   SimResult, simulate, simulate_fleet)
 from repro.fleet.traces import (Trace, diurnal_trace, flash_crowd_trace,
                                 poisson_trace, ramp_trace, replay_trace,
                                 standard_traces)
 from repro.fleet.workload import ServiceModel, service_model_from_cell
 
 __all__ = [
-    "Policy", "PredictivePolicy", "QueueProportionalPolicy", "ReactivePolicy",
-    "StaticPolicy", "default_policies", "REPORT_HEADERS", "FleetReport",
-    "comparison_table", "summarize", "weighted_percentile", "Scenario",
-    "lm_decode_scenario", "mset_scenario", "FleetObs", "SimResult", "simulate",
-    "Trace", "diurnal_trace", "flash_crowd_trace", "poisson_trace",
-    "ramp_trace", "replay_trace", "standard_traces", "ServiceModel",
+    "HeterogeneousPredictivePolicy", "Policy", "PredictivePolicy",
+    "QueueProportionalPolicy", "ReactivePolicy", "StaticPolicy",
+    "default_policies", "CohortMetrics", "cohort_metrics", "row_searchsorted",
+    "REPORT_HEADERS", "FleetReport", "best_per_trace", "comparison_table",
+    "cost_efficiency_table", "summarize", "weighted_percentile", "Scenario",
+    "lm_decode_scenario", "mset_scenario", "FleetConfig", "FleetObs",
+    "PoolConfig", "SimResult", "simulate", "simulate_fleet", "Trace",
+    "diurnal_trace", "flash_crowd_trace", "poisson_trace", "ramp_trace",
+    "replay_trace", "standard_traces", "ServiceModel",
     "service_model_from_cell",
 ]

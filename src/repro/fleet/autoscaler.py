@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.recommender import Constraint, recommend
+from repro.core.recommender import Constraint, feasible_ranking, recommend
 from repro.core.surfaces import fit_response_surface
 from repro.fleet.workload import ServiceModel, service_model_from_cell
 
@@ -26,8 +26,13 @@ _EPS = 1e-12
 
 
 class Policy:
-    """Base: stateless sizing against the bound service's capacity."""
+    """Base: stateless sizing against the bound service's capacity.
+
+    ``per_pool = True`` marks policies whose ``decide`` returns an
+    (n_seeds, n_pools) per-pool target for heterogeneous fleets; plain
+    policies return (n_seeds,) and only drive single-pool fleets."""
     name = "policy"
+    per_pool = False
     service: ServiceModel = None     # optional shape override (predictive)
 
     def reset(self, n_seeds: int) -> None:
@@ -35,6 +40,40 @@ class Policy:
 
     def decide(self, t: int, obs) -> np.ndarray:
         raise NotImplementedError
+
+
+class _RateForecaster:
+    """Shared linear-trend forecaster over a rolling arrival-rate window."""
+
+    def __init__(self, window_bins: int, horizon_s: float):
+        self.window_bins = max(int(window_bins), 2)
+        self.horizon_s = horizon_s
+        self._hist = None
+        self._n_obs = 0
+
+    def reset(self, n_seeds: int) -> None:
+        self._hist = np.zeros((self.window_bins, n_seeds))
+        self._n_obs = 0
+
+    def observe(self, obs) -> np.ndarray:
+        """Record this bin's arrival rate; return the rate forecast one
+        horizon ahead (per seed)."""
+        self._hist = np.roll(self._hist, -1, axis=0)
+        self._hist[-1] = obs.arrival_rate
+        self._n_obs += 1
+        w = min(self._n_obs, self.window_bins)
+        H = self._hist[-w:]
+        if w >= 3:
+            x = np.arange(w) - (w - 1) / 2.0
+            slope = (x[:, None] * (H - H.mean(axis=0))).sum(axis=0) / (x ** 2).sum()
+            return H[-1] + slope * (self.horizon_s / obs.dt_s)
+        return H[-1]
+
+    def mean_rate(self) -> np.ndarray:
+        """Rolling-mean arrival rate over the observed window (the sustained
+        component of demand)."""
+        w = min(max(self._n_obs, 1), self.window_bins)
+        return self._hist[-w:].mean(axis=0)
 
 
 def _replicas_for_rate(rate: np.ndarray, service: ServiceModel,
@@ -134,30 +173,90 @@ class PredictivePolicy(Policy):
         else:
             self._rate = self.service.max_throughput
         self.horizon_s = horizon_s
-        self.window_bins = max(int(window_bins), 2)
+        self.forecaster = _RateForecaster(window_bins, horizon_s)
         self.headroom = headroom
-        self._hist = None
 
     def reset(self, n_seeds):
-        self._hist = np.zeros((self.window_bins, n_seeds))
-        self._n_obs = 0
+        self.forecaster.reset(n_seeds)
 
     def decide(self, t, obs):
-        self._hist = np.roll(self._hist, -1, axis=0)
-        self._hist[-1] = obs.arrival_rate
-        self._n_obs += 1
-        w = min(self._n_obs, self.window_bins)
-        H = self._hist[-w:]
-        if w >= 3:
-            x = np.arange(w) - (w - 1) / 2.0
-            slope = (x[:, None] * (H - H.mean(axis=0))).sum(axis=0) / (x ** 2).sum()
-            forecast = H[-1] + slope * (self.horizon_s / obs.dt_s)
-        else:
-            forecast = H[-1]
+        forecast = self.forecaster.observe(obs)
         demand = np.maximum(forecast, obs.arrival_rate) \
             + obs.queue / max(self.horizon_s, obs.dt_s)
         per = max(self._rate * self.headroom, _EPS)
         return np.ceil(np.maximum(demand, 0.0) / per)
+
+
+class HeterogeneousPredictivePolicy(Policy):
+    """Per-pool predictive autoscaling for mixed-shape fleets.
+
+    ``recommend()``'s feasibility ranking splits the fleet's pools into a
+    *baseline* pool (the cheapest feasible shape — head of the ranking) and
+    *burst* pools (the rest, in ranking order). The baseline pool tracks the
+    sustained arrival rate (rolling mean), so it only moves slowly; the burst
+    pools absorb the forecast excess — coarse-grained capacity that spins up
+    ahead of a flash crowd and cancels back down after it. Demand the burst
+    pools cannot hold (their quota ``max_replicas``) falls back to baseline.
+    """
+    name = "hetero-predictive"
+    per_pool = True
+
+    def __init__(self, rows, constraint: Constraint, units_per_step: float,
+                 fleet, horizon_s: float = 60.0, window_bins: int = 12,
+                 sustain_bins: int = 60, headroom: float = 0.85):
+        self.fleet = fleet
+        pool_shapes = {p.service.shape.name for p in fleet.pools}
+        ref = [r for r in rows
+               if float(r.params.get("batch", units_per_step)) == units_per_step
+               and r.shape_name in pool_shapes]
+        self.recommendation = recommend(ref, constraint)
+        if self.recommendation.shape is None:
+            raise ValueError("hetero-predictive policy: no feasible pool shape "
+                             f"({self.recommendation.reason})")
+        rank = [s.name for _, _, s in feasible_ranking(ref, constraint)]
+        pos = {name: i for i, name in enumerate(rank)}
+        by_rank = sorted(range(len(fleet.pools)),
+                         key=lambda i: (pos.get(
+                             fleet.pools[i].service.shape.name, len(rank)), i))
+        self.base_idx = by_rank[0]
+        self.burst_idx = by_rank[1:]
+        self.horizon_s = horizon_s
+        self.headroom = headroom
+        self.forecaster = _RateForecaster(window_bins, horizon_s)
+        self.sustain = _RateForecaster(max(int(sustain_bins), 2), horizon_s)
+
+    def reset(self, n_seeds):
+        self.forecaster.reset(n_seeds)
+        self.sustain.reset(n_seeds)
+
+    def _per_replica(self, pool) -> float:
+        return max(pool.service.max_throughput * self.headroom, _EPS)
+
+    def decide(self, t, obs):
+        forecast = self.forecaster.observe(obs)
+        self.sustain.observe(obs)
+        demand = np.maximum(forecast, obs.arrival_rate) \
+            + obs.queue / max(self.horizon_s, obs.dt_s)
+        demand = np.maximum(demand, 0.0)
+        pools = self.fleet.pools
+        target = np.zeros((len(obs.queue), len(pools)))
+
+        base_pool = pools[self.base_idx]
+        base_cap = self._per_replica(base_pool)
+        base = np.clip(np.ceil(self.sustain.mean_rate() / base_cap),
+                       base_pool.min_replicas, base_pool.max_replicas)
+        residual = np.maximum(demand - base * base_cap, 0.0)
+        for i in self.burst_idx:
+            cap = self._per_replica(pools[i])
+            n = np.clip(np.ceil(residual / cap),
+                        pools[i].min_replicas, pools[i].max_replicas)
+            target[:, i] = n
+            residual = np.maximum(residual - n * cap, 0.0)
+        # overflow beyond every burst quota lands back on the baseline pool
+        target[:, self.base_idx] = np.clip(base + np.ceil(residual / base_cap),
+                                           base_pool.min_replicas,
+                                           base_pool.max_replicas)
+        return target
 
 
 def default_policies(rows, constraint: Constraint, units_per_step: float,

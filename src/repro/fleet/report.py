@@ -1,12 +1,15 @@
 """Fleet SLO/cost reporting: percentile latency, attainment, utilization, and
-dollar cost (via the core cost model) per policy, plus comparison tables."""
+dollar cost (via the core cost model) per policy, plus comparison tables.
+
+Attainment and percentiles are exact: ``simulate`` carries per-request cohort
+accounting (``ok_served``, the pooled sojourn distribution), so ``summarize``
+reads them off instead of re-deriving them from per-bin mean latencies."""
 from __future__ import annotations
 
 from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core.cost_model import dollar_cost
 from repro.core.report import fmt_time, markdown_table
 from repro.fleet.simulator import SimResult
 
@@ -14,7 +17,8 @@ from repro.fleet.simulator import SimResult
 def weighted_percentile(values: np.ndarray, weights: np.ndarray,
                         q: float) -> float:
     """Percentile q in [0, 100] of ``values`` where each value counts
-    ``weights`` times (per-bin latency weighted by requests served)."""
+    ``weights`` times (per-request sojourns weighted by cohort mass).
+    q=0 returns the min, q=100 the max; all-zero weights give NaN."""
     v = np.asarray(values, float).ravel()
     w = np.asarray(weights, float).ravel()
     keep = w > 0
@@ -31,15 +35,18 @@ def weighted_percentile(values: np.ndarray, weights: np.ndarray,
 class FleetReport:
     policy: str
     trace: str
-    shape: str
+    shape: str                  # "+"-joined pool shapes for mixed fleets
     slo_s: float
     p50_s: float
     p95_s: float
     p99_s: float
-    slo_attainment: float       # served within SLO / all arrivals (drops violate)
+    slo_attainment: float       # served in-SLO / completed (drops violate;
+    #                             end-of-trace backlog is excluded — those
+    #                             requests never got an outcome either way)
     mean_utilization: float
     drop_rate: float
-    mean_replicas: float
+    mean_replicas: float        # billed (ready + cold-starting) — the same
+    #                             quantity the cost columns integrate
     usd_total: float            # mean over MC seeds, whole trace
     usd_per_hour: float
 
@@ -58,28 +65,28 @@ REPORT_HEADERS = ["policy", "trace", "shape", "p50", "p99", "SLO", "util",
 
 
 def summarize(sim: SimResult) -> FleetReport:
-    served, lat = sim.served, sim.latency_s
     total_arrived = sim.arrivals.sum()
-    ok = served * (lat <= sim.slo_s)
-    attainment = (float(ok.sum() / total_arrived) if total_arrived > 0
+    # completed = everything that left the system (served or dropped); the
+    # terminal in-queue backlog never resolved, so it belongs to neither the
+    # numerator nor the denominator of attainment
+    completed = total_arrived - sim.queue[:, -1].sum()
+    attainment = (float(sim.ok_served.sum() / completed) if completed > 0
                   else 1.0)      # no traffic = vacuously met
-    replica_bins = sim.replica_bins()
-    usd = dollar_cost(sim.dt_s, replica_bins, sim.service.shape.chips,
-                      sim.service.shape.hw)
+    usd = sim.billed_usd()
     hours = sim.trace.duration_s / 3600.0
     util = sim.utilization[sim.replicas > 0]
     return FleetReport(
         policy=sim.policy_name,
         trace=sim.trace.name,
-        shape=sim.service.shape.name,
+        shape=sim.fleet.shape_label(),
         slo_s=sim.slo_s,
-        p50_s=weighted_percentile(lat, served, 50),
-        p95_s=weighted_percentile(lat, served, 95),
-        p99_s=weighted_percentile(lat, served, 99),
+        p50_s=weighted_percentile(sim.sojourn_values, sim.sojourn_weights, 50),
+        p95_s=weighted_percentile(sim.sojourn_values, sim.sojourn_weights, 95),
+        p99_s=weighted_percentile(sim.sojourn_values, sim.sojourn_weights, 99),
         slo_attainment=attainment,
         mean_utilization=float(util.mean()) if util.size else 0.0,
         drop_rate=float(sim.dropped.sum() / max(total_arrived, 1.0)),
-        mean_replicas=float(sim.replicas.mean()),
+        mean_replicas=float(sim.billed_replicas.mean()),
         usd_total=usd,
         usd_per_hour=usd / max(hours, 1e-12),
     )
@@ -89,3 +96,39 @@ def comparison_table(reports: list) -> str:
     """Markdown policy-comparison table, grouped by trace then cost."""
     rows = [r.row() for r in sorted(reports, key=lambda r: (r.trace, r.usd_per_hour))]
     return markdown_table(REPORT_HEADERS, rows)
+
+
+def best_per_trace(reports: list, min_attainment: float = 0.99) -> list:
+    """Cheapest report per trace among those meeting ``min_attainment``."""
+    best = {}
+    for r in reports:
+        if r.slo_attainment < min_attainment:
+            continue
+        if r.trace not in best or r.usd_per_hour < best[r.trace].usd_per_hour:
+            best[r.trace] = r
+    return [best[k] for k in sorted(best)]
+
+
+def cost_efficiency_table(reports: list, min_attainment: float = 0.99) -> str:
+    """Homogeneous-vs-mixed scoreboard: per trace, every (shape, policy) fleet
+    meeting the attainment bar, cheapest first, with its premium over the
+    winner."""
+    by_trace = {}
+    for r in reports:
+        by_trace.setdefault(r.trace, []).append(r)
+    rows = []
+    for trace in sorted(by_trace):
+        ok = sorted((r for r in by_trace[trace]
+                     if r.slo_attainment >= min_attainment),
+                    key=lambda r: r.usd_per_hour)
+        for r in ok:
+            premium = r.usd_per_hour / ok[0].usd_per_hour - 1.0
+            rows.append([trace, r.shape, r.policy,
+                         f"{r.slo_attainment * 100:.1f}%",
+                         f"${r.usd_per_hour:.2f}/hr",
+                         "winner" if r is ok[0] else f"+{premium * 100:.0f}%"])
+        if not ok:
+            rows.append([trace, "-", "-", f"<{min_attainment * 100:.0f}%",
+                         "-", "no fleet met the SLO bar"])
+    return markdown_table(
+        ["trace", "shape", "policy", "SLO", "cost", "vs winner"], rows)

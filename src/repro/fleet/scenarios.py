@@ -18,6 +18,7 @@ from repro.core.catalog import CATALOG, CloudShape
 from repro.core.cost_model import roofline
 from repro.core.recommender import Constraint
 from repro.core.scoping import CellResult
+from repro.fleet.simulator import FleetConfig, PoolConfig
 from repro.fleet.workload import ServiceModel, service_model_from_cell
 from repro.launch.serve import decode_flops_bytes
 from repro.mset.service import service_collective_bytes, service_flops_bytes
@@ -51,6 +52,32 @@ class Scenario:
     def cheapest_shape(self) -> str:
         """Smallest-chip shape present (baseline for static fleets)."""
         return min(self.rows_at(), key=lambda r: r.params["chips"]).shape_name
+
+    def pool_for(self, shape_name: str, batch: float = None,
+                 cold_start_s: float = 30.0, min_replicas: int = 0,
+                 max_replicas: int = 1024,
+                 initial_replicas: int = None) -> PoolConfig:
+        """One replica pool of ``shape_name`` running this scenario's service."""
+        return PoolConfig(service=self.service_for(shape_name, batch),
+                          cold_start_s=cold_start_s,
+                          min_replicas=min_replicas,
+                          max_replicas=max_replicas,
+                          initial_replicas=initial_replicas)
+
+    def fleet_for(self, shape_names, batch: float = None,
+                  cold_start_s: float = 30.0, min_replicas: int = 0,
+                  max_replicas=1024, max_queue: float = None) -> FleetConfig:
+        """A (possibly mixed) fleet over this scenario: one pool per shape
+        name. ``max_replicas`` may be an int applied to every pool or a
+        mapping ``shape_name -> quota`` (per-instance-type cloud quotas)."""
+        quota = (max_replicas if isinstance(max_replicas, dict)
+                 else {s: max_replicas for s in shape_names})
+        pools = tuple(
+            self.pool_for(s, batch, cold_start_s=cold_start_s,
+                          min_replicas=min_replicas,
+                          max_replicas=quota.get(s, 1024))
+            for s in shape_names)
+        return FleetConfig(pools, max_queue=max_queue)
 
 
 def _row(shape: CloudShape, params: dict, flops: float, bytes_: float,

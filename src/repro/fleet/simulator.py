@@ -1,58 +1,141 @@
 """Discrete-time fleet queueing simulator, numpy-vectorized over Monte Carlo
-seeds.
+seeds, with heterogeneous per-shape replica pools.
 
-Each time bin: arrivals join a shared queue; every ready replica drains
-back-to-back batches whose service time comes from the ``ServiceModel``
-(roofline-derived); the autoscaling policy observes (arrival rate, queue,
-utilization) and sets a replica target. Scale-downs are immediate, scale-ups
-become ready only after a cold-start delay (container pull + weight load), which
-is what separates reactive from predictive policies under bursts.
+Each time bin: arrivals join a shared queue (admission control drops overflow
+*at arrival*, before it can distort anyone's waiting time); the queue is
+drained across the fleet's pools in cost-efficiency order — the FIFO head goes
+to the cheapest capacity first; every ready replica drains back-to-back batches
+whose service time comes from its pool's ``ServiceModel`` (roofline-derived);
+the autoscaling policy observes (arrival rate, queue, utilization, per-pool
+replicas) and sets per-pool replica targets. Scale-downs first cancel pending
+cold-starts newest-first (a cancelled launch stops billing immediately), then
+shrink ready replicas; scale-ups become ready only after the pool's cold-start
+delay and are billed from their launch bin — cold capacity costs money before
+it serves anything.
 
-All per-bin state is an (n_seeds,) vector, so one pass simulates every Monte
+Latency is exact, not fluid: per-bin served masses feed the request-cohort
+model (``repro.fleet.cohort``), which recovers per-request FIFO sojourns and
+deadline misses from cumulative arithmetic. All per-bin state is an
+(n_seeds,) or (n_seeds, n_pools) vector, so one pass simulates every Monte
 Carlo draw of the trace at once — the fleet-level analogue of the paper's
 nested-loop simulation.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Optional
 
 import numpy as np
 
+from repro.core.cost_model import dollar_cost
+from repro.fleet.cohort import cohort_metrics
 from repro.fleet.traces import Trace
 from repro.fleet.workload import ServiceModel
 
 _EPS = 1e-12
 
 
+@dataclass(frozen=True)
+class PoolConfig:
+    """One homogeneous replica pool inside a (possibly mixed) fleet: a shape's
+    service model plus its own cold start and count bounds (cloud quotas)."""
+    service: ServiceModel
+    cold_start_s: float = 30.0
+    min_replicas: int = 0
+    max_replicas: int = 1024
+    initial_replicas: Optional[int] = None
+    name: Optional[str] = None
+
+    @property
+    def label(self) -> str:
+        return self.name or self.service.name
+
+
+@dataclass(frozen=True)
+class FleetConfig:
+    """A fleet = per-shape pools sharing one request queue (e.g. a cheap
+    ``v5e-4`` baseline pool plus ``v5e-16`` burst capacity)."""
+    pools: tuple
+    max_queue: Optional[float] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "pools", tuple(self.pools))
+        if not self.pools:
+            raise ValueError("FleetConfig needs at least one pool")
+
+    @property
+    def n_pools(self) -> int:
+        return len(self.pools)
+
+    def drain_order(self) -> list:
+        """Pool indices cheapest-$/request first — the order the shared queue
+        is drained in, so expensive burst capacity only sees overflow. Ties
+        (linear cost models price every shape identically per request) go to
+        the finer-grained pool: that is the baseline capacity a deployer keeps
+        busy, the coarse pool being burst overflow."""
+        return sorted(range(len(self.pools)),
+                      key=lambda i: (self.pools[i].service.usd_per_request,
+                                     self.pools[i].service.shape.price_per_hour,
+                                     self.pools[i].label))
+
+    def shape_label(self) -> str:
+        names = []
+        for p in self.pools:
+            if p.service.shape.name not in names:
+                names.append(p.service.shape.name)
+        return "+".join(names)
+
+
 @dataclass
 class FleetObs:
-    """What a policy sees at the end of a bin (all arrays are (n_seeds,))."""
+    """What a policy sees at the end of a bin (arrays are (n_seeds,) unless
+    noted). Homogeneous policies read the aggregate fields; per-pool policies
+    read ``pool_replicas``/``pool_in_flight``/``pools``."""
     t_s: float                  # sim time at bin end
     dt_s: float
     arrival_rate: np.ndarray    # requests/s observed this bin
     queue: np.ndarray           # backlog after serving/drops
-    replicas: np.ndarray        # ready replicas this bin
-    in_flight: np.ndarray       # replicas still cold-starting
+    replicas: np.ndarray        # ready replicas this bin (all pools)
+    in_flight: np.ndarray       # replicas still cold-starting (all pools)
     utilization: np.ndarray     # served / capacity this bin, in [0, 1]
-    service: ServiceModel       # the service model replicas run
+    service: ServiceModel       # pool 0's service (homogeneous fleets)
+    pool_replicas: np.ndarray = None    # (n_seeds, n_pools) ready per pool
+    pool_in_flight: np.ndarray = None   # (n_seeds, n_pools) cold-starting
+    pools: tuple = ()                   # the fleet's PoolConfigs
 
 
 @dataclass
 class SimResult:
     trace: Trace
-    service: ServiceModel
+    fleet: FleetConfig
     policy_name: str
     slo_s: float
-    cold_start_s: float
     # (n_seeds, n_bins) traces:
     arrivals: np.ndarray
+    admitted: np.ndarray        # arrivals minus admission-control drops
     served: np.ndarray
     dropped: np.ndarray
     queue: np.ndarray
-    replicas: np.ndarray        # ready (serving) replicas
+    replicas: np.ndarray        # ready (serving) replicas, all pools
     billed_replicas: np.ndarray  # ready + cold-starting (the cloud bill)
-    latency_s: np.ndarray       # per-bin mean sojourn estimate of served reqs
+    latency_s: np.ndarray       # per-bin mean sojourn of served reqs (exact)
+    ok_served: np.ndarray       # served mass meeting the SLO deadline (exact)
     utilization: np.ndarray
+    # (n_seeds, n_bins, n_pools) traces:
+    pool_replicas: np.ndarray
+    pool_billed: np.ndarray
+    pool_served: np.ndarray
+    # exact pooled per-request sojourn distribution (across seeds):
+    sojourn_values: np.ndarray = field(repr=False, default=None)
+    sojourn_weights: np.ndarray = field(repr=False, default=None)
+
+    @property
+    def service(self) -> ServiceModel:
+        return self.fleet.pools[0].service
+
+    @property
+    def cold_start_s(self) -> float:
+        return self.fleet.pools[0].cold_start_s
 
     @property
     def dt_s(self) -> float:
@@ -63,93 +146,187 @@ class SimResult:
         Cold-starting replicas cost money before they serve anything."""
         return float(self.billed_replicas.sum(axis=1).mean())
 
+    def billed_usd(self) -> float:
+        """Mean (over seeds) dollar bill, summed over pools at each pool's own
+        shape price."""
+        usd = 0.0
+        for p, pc in enumerate(self.fleet.pools):
+            bins = float(self.pool_billed[:, :, p].sum(axis=1).mean())
+            usd += dollar_cost(self.dt_s, bins, pc.service.shape.chips,
+                               pc.service.shape.hw)
+        return usd
+
+
+def _initial_replicas(pool: PoolConfig, rate0: float, provision: bool) -> int:
+    n0 = pool.initial_replicas
+    if n0 is None:
+        if provision:   # provision for the trace's initial rate (a deployer's
+            n0 = int(np.ceil(rate0 / max(pool.service.max_throughput, _EPS)))
+        else:           # move); secondary pools start at their floor
+            n0 = pool.min_replicas
+    if provision:
+        n0 = max(n0, 1)
+    return int(np.clip(n0, max(pool.min_replicas, 1) if provision
+                       else pool.min_replicas, pool.max_replicas))
+
+
+def simulate_fleet(trace: Trace, fleet: FleetConfig, policy, *,
+                   slo_s: float, max_queue: float = None) -> SimResult:
+    """Run ``policy`` against ``trace`` on a heterogeneous ``fleet``.
+
+    ``max_queue`` bounds the backlog (admission control): overflow is dropped
+    on arrival and counted as an SLO violation. ``None`` = unbounded (or the
+    fleet's own ``max_queue``). Per-pool policies (``policy.per_pool``) return
+    (n_seeds, n_pools) targets; plain policies require a single-pool fleet.
+    """
+    pools = fleet.pools
+    P = len(pools)
+    per_pool = bool(getattr(policy, "per_pool", False))
+    if P > 1 and not per_pool:
+        raise ValueError(f"policy {policy.name!r} returns a single target; "
+                         f"a {P}-pool fleet needs a per-pool policy "
+                         "(e.g. HeterogeneousPredictivePolicy)")
+    if max_queue is None:
+        max_queue = fleet.max_queue
+    order = fleet.drain_order()
+    S, T = trace.arrivals.shape
+    dt = trace.dt_s
+    cold_bins = [max(int(round(p.cold_start_s / dt)), 0) for p in pools]
+    max_cb = max(cold_bins)
+    svc_terms = [(p.service.t_fixed, p.service.t_per_unit,
+                  float(p.service.max_batch)) for p in pools]
+
+    policy.reset(S)
+    ready = np.zeros((S, P))
+    for p, pc in enumerate(pools):
+        ready[:, p] = _initial_replicas(pc, trace.rate[0], p == order[0])
+    queue = np.zeros(S)
+    pend = np.zeros((S, T + max_cb + 2, P))   # scale-ups maturing per bin
+    in_flight = np.zeros((S, P))              # running sum of future pend
+
+    slot_served = np.zeros((S, T, P))         # per (bin, drain-rank) mass
+    slot_bt = np.zeros((S, T, P))             # batch time of that slot
+    admitted = np.zeros((S, T))
+    rec = {k: np.zeros((S, T)) for k in
+           ("served", "dropped", "queue", "replicas", "billed", "util")}
+    pool_rep = np.zeros((S, T, P))
+    pool_billed = np.zeros((S, T, P))
+
+    for t in range(T):
+        matured = pend[:, t, :]
+        ready += matured
+        in_flight -= matured
+        arr = trace.arrivals[:, t].astype(float)
+        queue = queue + arr
+        # admission control happens at arrival: a dropped request never queues,
+        # so it cannot inflate the sojourn of requests that are actually served
+        drop = np.zeros(S)
+        if max_queue is not None:
+            drop = np.maximum(queue - max_queue, 0.0)
+            queue -= drop
+        admitted[:, t] = arr - drop
+
+        # drain the shared queue across pools, cheapest capacity first
+        remaining = queue
+        capacity = np.zeros(S)
+        for rank, p in enumerate(order):
+            t_fixed, t_unit, max_b = svc_terms[p]
+            n = np.maximum(ready[:, p], 0.0)
+            has = n > 0
+            # per-replica batch: split the backlog, clipped to the batch window
+            b = np.clip(np.ceil(np.divide(remaining, n, out=np.zeros(S),
+                                          where=has)), 1.0, max_b)
+            bt = np.maximum(t_fixed + b * t_unit, _EPS)
+            cap = np.where(has, n * b / bt, 0.0) * dt
+            s_p = np.minimum(remaining, cap)
+            remaining = remaining - s_p
+            capacity += cap
+            slot_served[:, t, rank] = s_p
+            slot_bt[:, t, rank] = bt
+        queue = remaining
+        served = slot_served[:, t, :].sum(axis=1)
+
+        pool_rep[:, t, :] = ready
+        n_ready = ready.sum(axis=1)
+        obs = FleetObs(
+            t_s=(t + 1) * dt, dt_s=dt, arrival_rate=arr / dt, queue=queue,
+            replicas=n_ready, in_flight=in_flight.sum(axis=1),
+            utilization=np.divide(served, capacity, out=np.zeros(S),
+                                  where=capacity > 0),
+            service=pools[0].service, pool_replicas=pool_rep[:, t, :],
+            pool_in_flight=in_flight.copy(), pools=pools)
+        target = np.asarray(policy.decide(t, obs), float)
+        if target.ndim == 1:
+            target = target[:, None]
+
+        for p, pc in enumerate(pools):
+            tg = np.clip(target[:, p], pc.min_replicas, pc.max_replicas)
+            excess = np.maximum(ready[:, p] + in_flight[:, p] - tg, 0.0)
+            if excess.any():
+                # scale down: cancel pending cold-starts newest-first (they
+                # stop billing now), then shrink ready replicas
+                for j in range(min(t + 1 + cold_bins[p], T + max_cb + 1),
+                               t, -1):
+                    col = pend[:, j, p]
+                    if not col.any():
+                        continue
+                    cut = np.minimum(col, excess)
+                    pend[:, j, p] = col - cut
+                    in_flight[:, p] -= cut
+                    excess -= cut
+                    if not excess.any():
+                        break
+                ready[:, p] = np.maximum(ready[:, p] - excess, 0.0)
+            grow = np.maximum(tg - ready[:, p] - in_flight[:, p], 0.0)
+            pend[:, min(t + 1 + cold_bins[p], T + max_cb + 1), p] += grow
+            in_flight[:, p] += grow
+            # the bill: replicas that served this bin (even if torn down at
+            # its end) plus everything cold-starting after this bin's
+            # decisions — a launch is billed in its launch bin, a cancelled
+            # launch is not
+            pool_billed[:, t, p] = obs.pool_replicas[:, p] + in_flight[:, p]
+
+        rec["served"][:, t] = served
+        rec["dropped"][:, t] = drop
+        rec["queue"][:, t] = queue
+        rec["replicas"][:, t] = n_ready
+        rec["billed"][:, t] = pool_billed[:, t, :].sum(axis=1)
+        rec["util"][:, t] = obs.utilization
+
+    # exact per-request FIFO latency from the cohort model: slots are (bin,
+    # drain-rank) pairs, time-ordered, matching how the queue head was assigned
+    cm = cohort_metrics(admitted, slot_served.reshape(S, T * P),
+                        np.repeat(np.arange(T), P),
+                        slot_bt.reshape(S, T * P), dt, slo_s)
+    slot_ok = cm.ok_served.reshape(S, T, P)
+    slot_mean = cm.mean_sojourn.reshape(S, T, P)
+    served_all = rec["served"]
+    lat = np.divide((slot_mean * slot_served).sum(axis=2), served_all,
+                    out=np.zeros((S, T)), where=served_all > 0)
+    # slots are drain-rank-ordered; report per-pool served in pool order
+    rank_of = np.argsort(np.asarray(order))
+
+    return SimResult(
+        trace=trace, fleet=fleet, policy_name=policy.name, slo_s=slo_s,
+        arrivals=trace.arrivals.astype(float), admitted=admitted,
+        served=served_all, dropped=rec["dropped"], queue=rec["queue"],
+        replicas=rec["replicas"], billed_replicas=rec["billed"],
+        latency_s=lat, ok_served=slot_ok.sum(axis=2),
+        utilization=rec["util"], pool_replicas=pool_rep,
+        pool_billed=pool_billed, pool_served=slot_served[:, :, rank_of],
+        sojourn_values=cm.sojourn_values, sojourn_weights=cm.sojourn_weights)
+
 
 def simulate(trace: Trace, service: ServiceModel, policy, *,
              slo_s: float, cold_start_s: float = 30.0,
              max_queue: float = None, initial_replicas: int = None,
              min_replicas: int = 0, max_replicas: int = 1024) -> SimResult:
-    """Run ``policy`` against ``trace`` on replicas of ``service``.
-
-    ``max_queue`` bounds the backlog (admission control): overflow is dropped
-    and counted as an SLO violation. ``None`` = unbounded queue.
-    """
+    """Homogeneous fleet: run ``policy`` against ``trace`` on replicas of
+    ``service``. A thin wrapper over ``simulate_fleet`` with one pool."""
     # The policy may carry its own shape choice (predictive: recommend()).
     service = getattr(policy, "service", None) or service
-    S, T = trace.arrivals.shape
-    dt = trace.dt_s
-    cold_bins = max(int(round(cold_start_s / dt)), 0)
-
-    policy.reset(S)
-    n0 = initial_replicas
-    if n0 is None:
-        # provision for the trace's initial rate (what a deployer would do)
-        n0 = int(np.ceil(trace.rate[0] / max(service.max_throughput, _EPS)))
-    n0 = int(np.clip(max(n0, 1), max(min_replicas, 1), max_replicas))
-
-    queue = np.zeros(S)
-    ready = np.full(S, n0, float)
-    pending = np.zeros((S, T + cold_bins + 1))   # scale-ups maturing per bin
-
-    rec = {k: np.zeros((S, T)) for k in
-           ("served", "dropped", "queue", "replicas", "billed", "latency",
-            "util")}
-
-    for t in range(T):
-        ready += pending[:, t]
-        arr = trace.arrivals[:, t].astype(float)
-        q_carry = queue.copy()          # standing backlog from earlier bins
-        queue = queue + arr
-
-        n = np.maximum(ready, 0.0)
-        has = n > 0
-        # per-replica batch: split the backlog, clipped to the batch window
-        b = np.clip(np.ceil(np.divide(queue, n, out=np.zeros_like(queue),
-                                      where=has)), 1.0, service.max_batch)
-        rate = np.where(has, n * service.throughput(b), 0.0)   # requests/s
-        capacity = rate * dt
-        served = np.minimum(queue, capacity)
-        queue = queue - served
-
-        # mean sojourn of this bin's served work: batch service time plus the
-        # delay of the standing backlog (Little's law, W = L / mu). Arrivals
-        # within the bin are fluid — under capacity with no carryover they flow
-        # straight through and only pay the batch time.
-        wait = np.divide(0.5 * (q_carry + queue), rate,
-                         out=np.full(S, np.inf), where=rate > 0)
-        lat = np.where(served > 0, service.batch_time(b) + wait, 0.0)
-
-        drop = np.zeros(S)
-        if max_queue is not None:
-            drop = np.maximum(queue - max_queue, 0.0)
-            queue -= drop
-
-        in_flight = pending[:, t + 1:].sum(axis=1)
-        obs = FleetObs(
-            t_s=(t + 1) * dt, dt_s=dt, arrival_rate=arr / dt, queue=queue,
-            replicas=n, in_flight=in_flight,
-            utilization=np.divide(served, capacity, out=np.zeros(S),
-                                  where=capacity > 0),
-            service=service)
-        target = np.clip(np.asarray(policy.decide(t, obs), float),
-                         min_replicas, max_replicas)
-
-        # scale down now; scale up after the cold start
-        total = ready + in_flight
-        ready = np.where(target < ready, np.maximum(target, 0.0), ready)
-        grow = np.maximum(target - total, 0.0)
-        pending[:, min(t + 1 + cold_bins, T + cold_bins)] += grow
-
-        rec["served"][:, t] = served
-        rec["dropped"][:, t] = drop
-        rec["queue"][:, t] = queue
-        rec["replicas"][:, t] = n
-        rec["billed"][:, t] = n + in_flight
-        rec["latency"][:, t] = lat
-        rec["util"][:, t] = obs.utilization
-
-    return SimResult(
-        trace=trace, service=service, policy_name=policy.name, slo_s=slo_s,
-        cold_start_s=cold_start_s, arrivals=trace.arrivals.astype(float),
-        served=rec["served"], dropped=rec["dropped"], queue=rec["queue"],
-        replicas=rec["replicas"], billed_replicas=rec["billed"],
-        latency_s=rec["latency"], utilization=rec["util"])
+    pool = PoolConfig(service=service, cold_start_s=cold_start_s,
+                      min_replicas=min_replicas, max_replicas=max_replicas,
+                      initial_replicas=initial_replicas)
+    return simulate_fleet(trace, FleetConfig((pool,), max_queue=max_queue),
+                          policy, slo_s=slo_s)

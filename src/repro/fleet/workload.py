@@ -10,6 +10,7 @@ roofline predicts.
 from __future__ import annotations
 
 from dataclasses import dataclass
+from functools import cached_property
 
 import numpy as np
 
@@ -36,14 +37,22 @@ class ServiceModel:
         b = np.asarray(b, float)
         return b / np.maximum(self.batch_time(b), 1e-12)
 
-    @property
+    @cached_property
     def max_throughput(self) -> float:
-        """Requests/s at full batch — the replica's capacity."""
+        """Requests/s at full batch — the replica's capacity (cached: the
+        simulator and policies read this every bin)."""
         return float(self.throughput(self.max_batch))
 
     @property
     def usd_per_replica_hour(self) -> float:
         return self.shape.price_per_hour
+
+    @property
+    def usd_per_request(self) -> float:
+        """Dollars per request at full batch — the cost-efficiency key a
+        heterogeneous fleet drains its shared queue by."""
+        return self.shape.price_per_hour / max(self.max_throughput * 3600.0,
+                                               1e-12)
 
 
 def service_model_from_cell(cell: CellResult, units_per_step: float,

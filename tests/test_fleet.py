@@ -171,6 +171,20 @@ def test_weighted_percentile():
     assert np.isnan(weighted_percentile(v, np.zeros(3), 50))
 
 
+def test_weighted_percentile_edge_cases():
+    v = np.array([3.0, 1.0, 2.0])
+    w = np.array([1.0, 2.0, 1.0])
+    assert weighted_percentile(v, w, 0) == 1.0      # q=0 is the min
+    assert weighted_percentile(v, w, 100) == 3.0    # q=100 is the max
+    # a single value is every percentile
+    for q in (0, 50, 100):
+        assert weighted_percentile(np.array([7.0]), np.array([2.0]), q) == 7.0
+    # zero-weight entries are invisible, even at the extremes
+    wz = np.array([0.0, 2.0, 1.0])
+    assert weighted_percentile(v, wz, 0) == 1.0
+    assert weighted_percentile(v, wz, 100) == 2.0
+
+
 def test_comparison_table_renders():
     svc = _service()
     tr = poisson_trace(2 * svc.max_throughput, 300.0, dt_s=5.0, n_seeds=2, seed=0)

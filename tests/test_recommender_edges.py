@@ -1,10 +1,11 @@
 """Constraint / recommender edge cases (degenerate probes, HBM bound,
-elasticity plans with infeasible regions)."""
+duplicate-cost ties, elasticity plans with infeasible regions)."""
 import numpy as np
 import pytest
 
 from repro.core import (CellResult, CloudShape, Constraint, RooflineTerms,
-                        elasticity_plan, get_shape)
+                        elasticity_plan, feasible_ranking, get_shape,
+                        recommend, register_shape)
 from repro.core.surfaces import fit_response_surface
 
 SHAPE = get_shape("v5e-4")
@@ -33,6 +34,31 @@ def test_feasible_throughput_and_price():
     assert not c.feasible(1.0, SHAPE)       # 50 units/s
     cp = Constraint(max_usd_per_hour=SHAPE.price_per_hour - 0.01)
     assert not cp.feasible(0.1, SHAPE)
+
+
+def test_recommend_survives_duplicate_cost_ties():
+    # two distinct shapes with identical price AND step time: the feasible
+    # sort must not fall through to comparing (unorderable) CloudShapes
+    alt = CloudShape("v5e-4-tie", (4, 1), ("data", "model"))
+    register_shape(alt)
+    try:
+        rows = [
+            CellResult(params={}, shape_name=name,
+                       terms=RooflineTerms(0.1, 0.02, 0.01))
+            for name in ("v5e-4-tie", "v5e-4")
+        ]
+        c = Constraint(max_step_latency_s=1.0)
+        rec = recommend(rows, c)
+        # deterministic winner: ties break by chips then name
+        assert rec.shape.name == "v5e-4"
+        assert rec.usd_per_hour == SHAPE.price_per_hour
+        ranking = feasible_ranking(rows, c)
+        assert [s.name for _, _, s in ranking] == ["v5e-4", "v5e-4-tie"]
+    finally:
+        from repro.core import catalog
+        catalog.CATALOG[:] = [s for s in catalog.CATALOG
+                              if s.name != "v5e-4-tie"]
+        catalog._BY_NAME.pop("v5e-4-tie", None)
 
 
 def test_elasticity_plan_marks_infeasible_growth_values():
