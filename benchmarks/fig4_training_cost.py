@@ -28,7 +28,7 @@ def run(full: bool = False):
     names, X, y = _arrays(rows)
     surf = fit_response_surface(names, X, y)
     print(f"# fig4 response surface r^2 = {surf.r2:.4f} "
-          f"(training cost ~ memvec^a * signals^b, paper: dominated by memvec+signals)")
+          "(training cost ~ memvec^a * signals^b, paper: dominated by memvec+signals)")
     sub = [r for r in rows if r.params["n_observations"] == obs[0]]
     xs, ys, Z = grid_to_matrix(sub, "n_memvec", "n_signals")
     print(render_ascii_surface(xs, ys, Z, "n_memvec", "n_signals",

@@ -29,7 +29,7 @@ def run(full: bool = False):
     y = np.array([r.mean_s for r in rows], float)
     surf = fit_response_surface(names, X, y)
     print(f"# fig5 response surface r^2 = {surf.r2:.4f} "
-          f"(paper: surveillance cost dominated by observations+signals)")
+          "(paper: surveillance cost dominated by observations+signals)")
     sub = [r for r in rows if r.params["n_memvec"] == (128 if not full else 256)]
     xs, ys, Z = grid_to_matrix(sub, "n_observations", "n_signals")
     print(render_ascii_surface(xs, ys, Z, "n_observations", "n_signals",

@@ -6,7 +6,6 @@ Paper: CPU vs CUDA-GPU measured. Here: XLA:CPU measured vs TPU-v5e roofline
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import (measured_training, mset_training_flops_bytes,
                                tpu_roofline_time)

@@ -1,5 +1,6 @@
 """Fleet-scaling sweep: policies x traces x fleet configurations (homogeneous
-per-shape fleets AND mixed-shape fleets), under per-instance-type cloud quotas.
+per-shape fleets AND mixed-shape fleets), under per-instance-type cloud
+quotas, plus a tiered-SLA multi-class sweep across scheduling disciplines.
 
 For each homogeneous candidate shape, replicas of that shape serve the same
 trace under each autoscaling policy; a mixed v5e-4+v5e-16 fleet runs the
@@ -7,8 +8,17 @@ heterogeneous predictive policy against the same traces. Every pool is capped
 at ``QUOTA`` replicas (clouds limit instance counts per type), which is what
 makes the comparison honest: a flash crowd can outgrow the small shape's
 quota, and a big-shape-only fleet overpays at baseline — the mixed fleet
-splits the difference. Results land in ``BENCH_fleet.json`` (CI artifact) so
-the perf/cost trajectory is tracked across PRs.
+splits the difference.
+
+The tiered-SLA sweep serves a gold/silver/bronze mixed-class flash-crowd
+workload under FIFO, strict priority, and EDF, sweeping static fleet sizes to
+the cheapest one meeting *every* class's SLO: the headline is that
+EDF/priority meet the tiered SLOs at measurably lower cost than
+capacity-equivalent FIFO (which must be provisioned for the peak because gold
+queues behind bronze backlog).
+
+Results land in ``BENCH_fleet.json`` (CI artifact); ``tools/check_bench.py``
+gates PRs against the committed baseline in ``benchmarks/baselines/``.
 
     PYTHONPATH=src python benchmarks/fleet_scaling.py [--full] [--out PATH]
 """
@@ -22,19 +32,23 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.fleet import (HeterogeneousPredictivePolicy, comparison_table,
+from repro.fleet import (HeterogeneousPredictivePolicy, StaticPolicy,
+                         class_table, comparison_table,
                          cost_efficiency_table, default_policies,
                          mset_scenario, simulate, simulate_fleet,
-                         standard_traces, summarize)
+                         standard_traces, summarize, tiered_sla_workload)
 
 QUOTA = 16              # max replicas per pool (per-instance-type quota)
 COLD_START_S = 60.0
 MIXED_SHAPES = ("v5e-4", "v5e-16")
+DISCIPLINE_SWEEP = ("fifo", "priority", "edf")
+TIERED_ATTAINMENT_BAR = 0.99    # every class must clear this
 
 
 def _record(report, sim, wall_s):
     return {
         "policy": report.policy,
+        "discipline": report.discipline,
         "trace": report.trace,
         "shapes": report.shape,
         "pools": [{"shape": p.service.shape.name,
@@ -110,6 +124,67 @@ def run(full: bool = False, scenario=None):
     return reports, records
 
 
+def _class_record(report, n_replicas):
+    return {
+        "discipline": report.discipline,
+        "replicas": n_replicas,
+        "usd_per_hour": report.usd_per_hour,
+        "worst_class_attainment": report.worst_class_attainment(),
+        "class_attainment": {c.name: c.attainment
+                             for c in report.class_reports},
+        "class_p99_s": {c.name: c.p99_s for c in report.class_reports},
+    }
+
+
+def run_tiered(full: bool = False, scenario=None):
+    """Tiered-SLA mixed-class sweep: for each discipline, the cheapest static
+    fleet meeting every class SLO at >= ``TIERED_ATTAINMENT_BAR``; plus FIFO
+    evaluated at the EDF winner's capacity (the capacity-equivalent
+    comparison the headline rests on)."""
+    scenario = scenario or mset_scenario(n_signals=1024, n_memvec=4096,
+                                         fleet=8, slo_s=1.0)
+    service = scenario.service_for(scenario.cheapest_shape())
+    duration = 7200.0 if full else 3600.0
+    n_seeds = 16 if full else 8
+    wl = tiered_sla_workload(6.0 * service.max_throughput, duration,
+                             dt_s=5.0, n_seeds=n_seeds, seed=3)
+    cheapest = {}                 # discipline -> (n, report)
+    by_n = {}                     # (discipline, n) -> report
+    for disc in DISCIPLINE_SWEEP:
+        for n in range(2, QUOTA + 1):
+            rep = summarize(simulate(wl, service, StaticPolicy(n),
+                                     discipline=disc, initial_replicas=n,
+                                     max_replicas=QUOTA))
+            by_n[(disc, n)] = rep
+            if rep.worst_class_attainment() >= TIERED_ATTAINMENT_BAR:
+                cheapest[disc] = (n, rep)
+                break
+    summary = {
+        "workload": {
+            "tiers": [{"name": c.name, "slo_s": c.slo_s,
+                       "priority": c.priority} for c in wl.classes],
+            "base_rate_per_s": 6.0 * service.max_throughput,
+            "duration_s": duration,
+            "n_seeds": n_seeds,
+        },
+        "shape": service.shape.name,
+        "attainment_bar": TIERED_ATTAINMENT_BAR,
+        "cheapest_feasible": {d: _class_record(rep, n)
+                              for d, (n, rep) in cheapest.items()},
+    }
+    # capacity-equivalent FIFO: what FIFO does with the EDF winner's fleet
+    if "edf" in cheapest:
+        n_edf = cheapest["edf"][0]
+        rep = by_n.get(("fifo", n_edf))
+        if rep is None:
+            rep = summarize(simulate(wl, service, StaticPolicy(n_edf),
+                                     discipline="fifo",
+                                     initial_replicas=n_edf,
+                                     max_replicas=QUOTA))
+        summary["fifo_at_edf_capacity"] = _class_record(rep, n_edf)
+    return summary, cheapest
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -118,6 +193,7 @@ def main():
     args = ap.parse_args()
     t0 = time.perf_counter()
     reports, records = run(full=args.full)
+    tiered, cheapest = run_tiered(full=args.full)
     bench = {
         "benchmark": "fleet_scaling",
         "full": args.full,
@@ -125,14 +201,25 @@ def main():
         "cold_start_s": COLD_START_S,
         "total_wall_clock_s": time.perf_counter() - t0,
         "records": records,
+        "tiered_sla": tiered,
     }
     with open(args.out, "w") as f:
         json.dump(bench, f, indent=2)
     print(comparison_table(reports))
-    print(f"\ncheapest fleet meeting >=99% SLO per trace "
+    print("\ncheapest fleet meeting >=99% SLO per trace "
           f"(quota {QUOTA} replicas/pool):")
     print(cost_efficiency_table(reports))
-    print(f"\nwrote {len(records)} records to {args.out}")
+    print("\ntiered-SLA mixed-class sweep (cheapest feasible fleet per "
+          "discipline, every class >= "
+          f"{TIERED_ATTAINMENT_BAR * 100:.0f}%):")
+    print(class_table([rep for _, rep in cheapest.values()]))
+    if "fifo_at_edf_capacity" in tiered:
+        eq = tiered["fifo_at_edf_capacity"]
+        print(f"\nFIFO at the EDF winner's capacity ({eq['replicas']} "
+              "replicas): worst class attainment "
+              f"{eq['worst_class_attainment'] * 100:.1f}% "
+              f"(bar {TIERED_ATTAINMENT_BAR * 100:.0f}%)")
+    print(f"\nwrote {len(records)} records + tiered summary to {args.out}")
 
 
 if __name__ == "__main__":

@@ -9,7 +9,7 @@ import glob
 import json
 import os
 
-from repro.core.report import fmt_si, fmt_time, markdown_table
+from repro.core.report import fmt_time, markdown_table
 
 
 def load(mesh: str = "pod16x16", art_dir: str = "artifacts/dryrun"):

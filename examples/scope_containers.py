@@ -13,7 +13,6 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))  # benchmarks/
 
 import jax
-import numpy as np
 
 from benchmarks.common import mset_surveil_flops_bytes, tpu_roofline_time
 from repro.core import (CATALOG, CellResult, Constraint, ContainerStress,

@@ -6,13 +6,20 @@ over roofline rows); the fleet simulator then answers what that choice costs
 under steady, diurnal, flash-crowd, and ramp arrivals. A mixed-shape fleet
 (fine-grained baseline pool + coarse burst pool, driven by the heterogeneous
 predictive policy) rides along in the same table — latencies are exact
-per-request FIFO sojourns from the cohort model, not fluid estimates.
+per-request sojourns from the cohort model, not fluid estimates.
+
+The last section serves a tiered-SLA *multi-class* workload (gold/silver/
+bronze SLOs) under all three scheduling disciplines — FIFO, strict priority,
+EDF — at the same capacity, showing discipline choice doing what extra
+replicas otherwise would.
 
     PYTHONPATH=src python examples/simulate_fleet.py
 """
-from repro.fleet import (HeterogeneousPredictivePolicy, comparison_table,
-                         default_policies, lm_decode_scenario, mset_scenario,
-                         simulate, simulate_fleet, standard_traces, summarize)
+from repro.fleet import (HeterogeneousPredictivePolicy, StaticPolicy,
+                         class_table, comparison_table, default_policies,
+                         lm_decode_scenario, mset_scenario, simulate,
+                         simulate_fleet, standard_traces, summarize,
+                         tiered_sla_workload)
 
 
 def run_scenario(scenario, mean_rate: float, duration_s: float = 3600.0,
@@ -59,6 +66,23 @@ def run_scenario(scenario, mean_rate: float, duration_s: float = 3600.0,
     return reports
 
 
+def run_disciplines(scenario, n_replicas: int = 10, duration_s: float = 3600.0,
+                    n_seeds: int = 4):
+    """Same fleet, same trace, three scheduling disciplines: the per-class
+    table shows FIFO leaking bronze's queueing delay into gold's latency."""
+    service = scenario.service_for(scenario.cheapest_shape())
+    wl = tiered_sla_workload(6.0 * service.max_throughput, duration_s,
+                             dt_s=5.0, n_seeds=n_seeds, seed=3)
+    print(f"\n=== {wl.name}: {n_replicas} x {service.shape.name}, classes "
+          + ", ".join(f"{c.name}({c.slo_s:g}s)" for c in wl.classes)
+          + " ===")
+    reports = [summarize(simulate(wl, service, StaticPolicy(n_replicas),
+                                  discipline=d, initial_replicas=n_replicas))
+               for d in ("fifo", "priority", "edf")]
+    print(class_table(reports))
+    return reports
+
+
 def main():
     # drive each scenario at ~70% of an 8-replica fleet of the smallest shape,
     # so bursts genuinely outrun the cold start
@@ -69,6 +93,8 @@ def main():
     lm = lm_decode_scenario("minitron-4b", ctx=512, slo_s=0.25)
     svc = lm.service_for(lm.rows_at()[0].shape_name)
     run_scenario(lm, mean_rate=5.6 * svc.max_throughput)
+
+    run_disciplines(mset)
 
 
 if __name__ == "__main__":

@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import importlib
 
-from repro.configs.base import ArchConfig, SHAPES, ShapeSpec, shape_applicable, input_specs, model_flops
+from repro.configs.base import ArchConfig, SHAPES
 
 _ARCH_MODULES = {
     "nemotron-4-15b": "repro.configs.nemotron_4_15b",

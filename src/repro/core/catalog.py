@@ -6,7 +6,6 @@ the ``pod`` axis crossed by DCI.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
 
 import jax
 
@@ -62,7 +61,7 @@ def register_shape(shape: CloudShape, overwrite: bool = False) -> CloudShape:
     non-standard slices or alternate HardwareSpecs)."""
     if shape.name in _BY_NAME and not overwrite:
         raise ValueError(f"shape {shape.name!r} already registered "
-                         f"(pass overwrite=True to replace)")
+                         "(pass overwrite=True to replace)")
     if shape.name in _BY_NAME:
         CATALOG[[s.name for s in CATALOG].index(shape.name)] = shape
     else:

@@ -5,7 +5,7 @@ Constants per the brief: 197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link 
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 @dataclass(frozen=True)

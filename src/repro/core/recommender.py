@@ -9,10 +9,9 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Callable, Optional
+from typing import Optional
 
-from repro.core.catalog import CATALOG, CloudShape, get_shape
-from repro.core.cost_model import V5E, dollar_cost
+from repro.core.catalog import CloudShape, get_shape
 
 
 @dataclass(frozen=True)

@@ -5,10 +5,9 @@ dimension is not divisible by the assigned mesh axes (e.g. kv_heads=1 under TP=1
 from __future__ import annotations
 
 import math
-from typing import Any, NamedTuple, Optional, Sequence
+from typing import Any, Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 

@@ -1,33 +1,47 @@
 # Fleet layer: what happens to a recommended Shape under live traffic.
-# traces -> queueing simulation (homogeneous or mixed-shape pools, exact
-# per-request FIFO latency via the cohort model) -> scaling policy -> SLO/cost
-# report, closing the loop from the paper's Monte Carlo cost surfaces to fleet
-# operating cost.
+# traces -> multi-class workloads -> queueing simulation (homogeneous or
+# mixed-shape pools, FIFO/priority/EDF scheduling disciplines, exact
+# per-request latency via the cohort model) -> scaling policy -> per-class
+# SLO/cost report, closing the loop from the paper's Monte Carlo cost
+# surfaces to fleet operating cost.
 from repro.fleet.autoscaler import (HeterogeneousPredictivePolicy, Policy,
                                     PredictivePolicy, QueueProportionalPolicy,
                                     ReactivePolicy, StaticPolicy,
                                     default_policies)
-from repro.fleet.cohort import CohortMetrics, cohort_metrics, row_searchsorted
-from repro.fleet.report import (REPORT_HEADERS, FleetReport, best_per_trace,
+from repro.fleet.cohort import (CohortMetrics, cohort_metrics,
+                                multiclass_cohort_metrics, row_searchsorted)
+from repro.fleet.discipline import (DISCIPLINES, CohortQueue, Discipline,
+                                    EDFDiscipline, FIFODiscipline,
+                                    PriorityDiscipline, get_discipline,
+                                    split_service)
+from repro.fleet.report import (CLASS_HEADERS, REPORT_HEADERS, ClassReport,
+                                FleetReport, best_per_trace, class_table,
                                 comparison_table, cost_efficiency_table,
                                 summarize, weighted_percentile)
-from repro.fleet.scenarios import Scenario, lm_decode_scenario, mset_scenario
+from repro.fleet.scenarios import (Scenario, interactive_batch_workload,
+                                   lm_decode_scenario, mset_scenario,
+                                   tiered_sla_workload)
 from repro.fleet.simulator import (FleetConfig, FleetObs, PoolConfig,
                                    SimResult, simulate, simulate_fleet)
 from repro.fleet.traces import (Trace, diurnal_trace, flash_crowd_trace,
                                 poisson_trace, ramp_trace, replay_trace,
                                 standard_traces)
-from repro.fleet.workload import ServiceModel, service_model_from_cell
+from repro.fleet.workload import (RequestClass, ServiceModel, Workload,
+                                  service_model_from_cell)
 
 __all__ = [
     "HeterogeneousPredictivePolicy", "Policy", "PredictivePolicy",
     "QueueProportionalPolicy", "ReactivePolicy", "StaticPolicy",
-    "default_policies", "CohortMetrics", "cohort_metrics", "row_searchsorted",
-    "REPORT_HEADERS", "FleetReport", "best_per_trace", "comparison_table",
-    "cost_efficiency_table", "summarize", "weighted_percentile", "Scenario",
-    "lm_decode_scenario", "mset_scenario", "FleetConfig", "FleetObs",
-    "PoolConfig", "SimResult", "simulate", "simulate_fleet", "Trace",
-    "diurnal_trace", "flash_crowd_trace", "poisson_trace", "ramp_trace",
-    "replay_trace", "standard_traces", "ServiceModel",
-    "service_model_from_cell",
+    "default_policies", "CohortMetrics", "cohort_metrics",
+    "multiclass_cohort_metrics", "row_searchsorted", "DISCIPLINES",
+    "CohortQueue", "Discipline", "EDFDiscipline", "FIFODiscipline",
+    "PriorityDiscipline", "get_discipline", "split_service", "CLASS_HEADERS",
+    "REPORT_HEADERS", "ClassReport", "FleetReport", "best_per_trace",
+    "class_table", "comparison_table", "cost_efficiency_table", "summarize",
+    "weighted_percentile", "Scenario", "interactive_batch_workload",
+    "lm_decode_scenario", "mset_scenario", "tiered_sla_workload",
+    "FleetConfig", "FleetObs", "PoolConfig", "SimResult", "simulate",
+    "simulate_fleet", "Trace", "diurnal_trace", "flash_crowd_trace",
+    "poisson_trace", "ramp_trace", "replay_trace", "standard_traces",
+    "RequestClass", "ServiceModel", "Workload", "service_model_from_cell",
 ]

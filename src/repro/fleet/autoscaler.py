@@ -83,6 +83,19 @@ def _replicas_for_rate(rate: np.ndarray, service: ServiceModel,
     return np.ceil(np.maximum(rate, 0.0) / per)
 
 
+def _queue_demand(obs, drain_s: float) -> np.ndarray:
+    """Backlog-drain demand in req/s. With multiple request classes each
+    class's backlog must clear within its own SLO (a 30 s batch backlog is not
+    the emergency a 1 s interactive backlog is), so per-class backlog is
+    divided by min(drain_s, slo). Single-class observations keep the original
+    aggregate rule exactly."""
+    if getattr(obs, "class_queue", None) is None or len(obs.classes) <= 1:
+        return obs.queue / max(drain_s, obs.dt_s)
+    slos = np.array([c.slo_s for c in obs.classes])
+    horizon = np.maximum(np.minimum(drain_s, slos), obs.dt_s)
+    return (obs.class_queue / horizon[None, :]).sum(axis=1)
+
+
 class StaticPolicy(Policy):
     name = "static"
 
@@ -134,7 +147,7 @@ class QueueProportionalPolicy(Policy):
         self.headroom = headroom
 
     def decide(self, t, obs):
-        demand = obs.arrival_rate + obs.queue / max(self.drain_s, obs.dt_s)
+        demand = obs.arrival_rate + _queue_demand(obs, self.drain_s)
         return _replicas_for_rate(demand, obs.service, self.headroom)
 
 
@@ -182,7 +195,7 @@ class PredictivePolicy(Policy):
     def decide(self, t, obs):
         forecast = self.forecaster.observe(obs)
         demand = np.maximum(forecast, obs.arrival_rate) \
-            + obs.queue / max(self.horizon_s, obs.dt_s)
+            + _queue_demand(obs, self.horizon_s)
         per = max(self._rate * self.headroom, _EPS)
         return np.ceil(np.maximum(demand, 0.0) / per)
 
@@ -197,6 +210,12 @@ class HeterogeneousPredictivePolicy(Policy):
     pools absorb the forecast excess — coarse-grained capacity that spins up
     ahead of a flash crowd and cancels back down after it. Demand the burst
     pools cannot hold (their quota ``max_replicas``) falls back to baseline.
+
+    With a multi-class workload, capacity is split by class criticality: a
+    class whose SLO is tighter than the burst pools' cold start cannot wait
+    for burst capacity to spin up, so its arrival rate and backlog-drain
+    demand floor the always-ready baseline pool instead of riding the
+    forecast into the burst pools.
     """
     name = "hetero-predictive"
     per_pool = True
@@ -232,18 +251,35 @@ class HeterogeneousPredictivePolicy(Policy):
     def _per_replica(self, pool) -> float:
         return max(pool.service.max_throughput * self.headroom, _EPS)
 
+    def _critical_demand(self, obs) -> np.ndarray:
+        """Demand (req/s) from classes too latency-critical for burst pools:
+        their SLO is shorter than the burst cold start, so a backlog would
+        miss its deadline before burst capacity comes up."""
+        lag = max(self.fleet.pools[i].cold_start_s for i in self.burst_idx)
+        crit = np.array([c.slo_s <= lag for c in obs.classes])
+        if not crit.any():
+            return np.zeros_like(obs.queue)
+        slos = np.array([c.slo_s for c in obs.classes])
+        horizon = np.maximum(np.minimum(self.horizon_s, slos), obs.dt_s)
+        return (obs.class_arrival_rate[:, crit].sum(axis=1)
+                + (obs.class_queue[:, crit] / horizon[crit][None, :])
+                .sum(axis=1))
+
     def decide(self, t, obs):
         forecast = self.forecaster.observe(obs)
         self.sustain.observe(obs)
         demand = np.maximum(forecast, obs.arrival_rate) \
-            + obs.queue / max(self.horizon_s, obs.dt_s)
+            + _queue_demand(obs, self.horizon_s)
         demand = np.maximum(demand, 0.0)
         pools = self.fleet.pools
         target = np.zeros((len(obs.queue), len(pools)))
 
         base_pool = pools[self.base_idx]
         base_cap = self._per_replica(base_pool)
-        base = np.clip(np.ceil(self.sustain.mean_rate() / base_cap),
+        base_demand = self.sustain.mean_rate()
+        if len(getattr(obs, "classes", ())) > 1 and self.burst_idx:
+            base_demand = np.maximum(base_demand, self._critical_demand(obs))
+        base = np.clip(np.ceil(base_demand / base_cap),
                        base_pool.min_replicas, base_pool.max_replicas)
         residual = np.maximum(demand - base * base_cap, 0.0)
         for i in self.burst_idx:

@@ -132,3 +132,27 @@ def cohort_metrics(admitted: np.ndarray, served: np.ndarray,
     keep = w > _MASS_EPS
     return CohortMetrics(ok_served=ok_served, mean_sojourn=mean_sojourn,
                          sojourn_values=soj[keep], sojourn_weights=w[keep])
+
+
+def multiclass_cohort_metrics(admitted: np.ndarray, served: np.ndarray,
+                              slot_bin: np.ndarray,
+                              slot_batch_time: np.ndarray, dt_s: float,
+                              slo_s) -> list:
+    """Per-class exact sojourn recovery: one ``CohortMetrics`` per class.
+
+    Every scheduling discipline in ``repro.fleet.discipline`` keeps cohort
+    keys non-decreasing in the arrival bin within a class, so service *within*
+    a class is FIFO under all of them and the single-class cumulative
+    arithmetic applies class by class — the discipline only shows up through
+    the per-class served-per-slot split.
+
+    admitted: (S, T, C) post-admission arrivals; served: (S, K, C) per-slot
+    per-class served mass; slo_s: per-class deadline, scalar or (C,).
+    """
+    admitted = np.asarray(admitted, float)
+    served = np.asarray(served, float)
+    C = admitted.shape[2]
+    slo = np.broadcast_to(np.asarray(slo_s, float), (C,))
+    return [cohort_metrics(admitted[:, :, c], served[:, :, c], slot_bin,
+                           slot_batch_time, dt_s, float(slo[c]))
+            for c in range(C)]

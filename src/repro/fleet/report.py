@@ -32,6 +32,19 @@ def weighted_percentile(values: np.ndarray, weights: np.ndarray,
 
 
 @dataclass(frozen=True)
+class ClassReport:
+    """Per-request-class slice of a ``FleetReport`` (attainment is per the
+    class's own SLO; cost is the whole fleet's — capacity is shared)."""
+    name: str
+    slo_s: float
+    share: float                # fraction of total arrivals
+    p50_s: float
+    p99_s: float
+    attainment: float
+    drop_rate: float
+
+
+@dataclass(frozen=True)
 class FleetReport:
     policy: str
     trace: str
@@ -49,6 +62,15 @@ class FleetReport:
     #                             quantity the cost columns integrate
     usd_total: float            # mean over MC seeds, whole trace
     usd_per_hour: float
+    discipline: str = "fifo"
+    class_reports: tuple = ()   # ClassReport per request class
+
+    def worst_class_attainment(self) -> float:
+        """The binding SLO: the lowest per-class attainment (multi-class
+        fleets must meet *every* class's bar, not the traffic-weighted mix)."""
+        if not self.class_reports:
+            return self.slo_attainment
+        return min(c.attainment for c in self.class_reports)
 
     def row(self) -> list:
         return [self.policy, self.trace, self.shape,
@@ -62,6 +84,27 @@ class FleetReport:
 
 REPORT_HEADERS = ["policy", "trace", "shape", "p50", "p99", "SLO", "util",
                   "drop", "replicas", "cost"]
+
+
+def _class_reports(sim: SimResult, total_arrived: float) -> tuple:
+    if sim.workload is None or sim.class_served is None:
+        return ()
+    out = []
+    for c, rc in enumerate(sim.classes):
+        arrived = float(sim.class_admitted[:, :, c].sum()
+                        + sim.class_dropped[:, :, c].sum())
+        completed = arrived - float(sim.class_queue[:, -1, c].sum())
+        vals, weights = sim.class_sojourns[c]
+        out.append(ClassReport(
+            name=rc.name, slo_s=rc.slo_s,
+            share=arrived / max(total_arrived, 1.0),
+            p50_s=weighted_percentile(vals, weights, 50),
+            p99_s=weighted_percentile(vals, weights, 99),
+            attainment=(float(sim.class_ok[:, :, c].sum() / completed)
+                        if completed > 0 else 1.0),
+            drop_rate=float(sim.class_dropped[:, :, c].sum()
+                            / max(arrived, 1.0))))
+    return tuple(out)
 
 
 def summarize(sim: SimResult) -> FleetReport:
@@ -89,6 +132,8 @@ def summarize(sim: SimResult) -> FleetReport:
         mean_replicas=float(sim.billed_replicas.mean()),
         usd_total=usd,
         usd_per_hour=usd / max(hours, 1e-12),
+        discipline=sim.discipline,
+        class_reports=_class_reports(sim, float(total_arrived)),
     )
 
 
@@ -132,3 +177,25 @@ def cost_efficiency_table(reports: list, min_attainment: float = 0.99) -> str:
                          "-", "no fleet met the SLO bar"])
     return markdown_table(
         ["trace", "shape", "policy", "SLO", "cost", "vs winner"], rows)
+
+
+CLASS_HEADERS = ["policy", "discipline", "trace", "class", "SLO", "share",
+                 "p50", "p99", "attainment", "drop", "cost"]
+
+
+def class_table(reports: list) -> str:
+    """Per-class attainment/cost table: one row per (fleet run, request
+    class), grouped by trace then discipline. The cost column is the whole
+    fleet's $/hr — capacity is shared, so a class's bill is the fleet's."""
+    rows = []
+    for r in sorted(reports, key=lambda r: (r.trace, r.discipline, r.policy)):
+        for c in (r.class_reports
+                  or (ClassReport("all", r.slo_s, 1.0, r.p50_s, r.p99_s,
+                                  r.slo_attainment, r.drop_rate),)):
+            rows.append([r.policy, r.discipline, r.trace, c.name,
+                         fmt_time(c.slo_s), f"{c.share * 100:.0f}%",
+                         fmt_time(c.p50_s), fmt_time(c.p99_s),
+                         f"{c.attainment * 100:.2f}%",
+                         f"{c.drop_rate * 100:.2f}%",
+                         f"${r.usd_per_hour:.2f}/hr"])
+    return markdown_table(CLASS_HEADERS, rows)

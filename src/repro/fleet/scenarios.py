@@ -11,7 +11,7 @@ milliseconds and the simulator stays CPU-cheap.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from repro.configs import get_config
 from repro.core.catalog import CATALOG, CloudShape
@@ -19,7 +19,10 @@ from repro.core.cost_model import roofline
 from repro.core.recommender import Constraint
 from repro.core.scoping import CellResult
 from repro.fleet.simulator import FleetConfig, PoolConfig
-from repro.fleet.workload import ServiceModel, service_model_from_cell
+from repro.fleet.traces import (diurnal_trace, flash_crowd_trace,
+                                poisson_trace)
+from repro.fleet.workload import (RequestClass, ServiceModel, Workload,
+                                  service_model_from_cell)
 from repro.launch.serve import decode_flops_bytes
 from repro.mset.service import service_collective_bytes, service_flops_bytes
 
@@ -78,6 +81,55 @@ class Scenario:
                           max_replicas=quota.get(s, 1024))
             for s in shape_names)
         return FleetConfig(pools, max_queue=max_queue)
+
+
+def interactive_batch_workload(mean_rate_per_s: float, duration_s: float,
+                               dt_s: float = 5.0, *,
+                               interactive_frac: float = 0.4,
+                               interactive_slo_s: float = 1.0,
+                               batch_slo_s: float = 30.0,
+                               n_seeds: int = 8, seed: int = 0) -> Workload:
+    """Interactive-vs-batch mix: a diurnal interactive stream with a tight
+    SLO sharing the fleet with steady batch/backfill traffic that can wait.
+    The canonical case where discipline choice dominates raw capacity: FIFO
+    makes interactive requests queue behind batch backlog."""
+    inter = diurnal_trace(interactive_frac * mean_rate_per_s, duration_s,
+                          dt_s, period_s=duration_s, n_seeds=n_seeds,
+                          seed=seed)
+    batch = poisson_trace((1.0 - interactive_frac) * mean_rate_per_s,
+                          duration_s, dt_s, n_seeds=n_seeds, seed=seed + 1)
+    return Workload(
+        "interactive+batch",
+        (RequestClass("interactive", interactive_slo_s, priority=0),
+         RequestClass("batch", batch_slo_s, priority=1)),
+        (inter, batch))
+
+
+def tiered_sla_workload(mean_rate_per_s: float, duration_s: float,
+                        dt_s: float = 5.0, *,
+                        tiers=(("gold", 1.0, 0.2), ("silver", 4.0, 0.3),
+                               ("bronze", 60.0, 0.5)),
+                        peak_mult: float = 2.0, burst_width_s: float = None,
+                        n_seeds: int = 8, seed: int = 0) -> Workload:
+    """Tiered-SLA mix: (name, slo_s, traffic share) tiers all riding the same
+    flash-crowd demand shape (independently sampled per tier), priorities in
+    tier order. ``mean_rate_per_s`` is the off-peak total rate; the
+    coincident bursts peak at ``peak_mult`` x that. The burst forces
+    queueing, which is where the disciplines separate: EDF/priority hold
+    gold's deadline through the crowd by lending bronze's slack to the
+    queue, so they meet every tier's SLO at well below peak capacity, while
+    FIFO must be provisioned for the peak."""
+    shares = [t[2] for t in tiers]
+    total = sum(shares)
+    width = duration_s / 30 if burst_width_s is None else burst_width_s
+    classes, traces = [], []
+    for i, (name, slo_s, share) in enumerate(tiers):
+        classes.append(RequestClass(name, slo_s, priority=i))
+        traces.append(flash_crowd_trace(
+            (share / total) * mean_rate_per_s, duration_s, dt_s,
+            peak_mult=peak_mult, burst_width_s=width,
+            n_seeds=n_seeds, seed=seed + i))
+    return Workload("tiered-sla", tuple(classes), tuple(traces))
 
 
 def _row(shape: CloudShape, params: dict, flops: float, bytes_: float,

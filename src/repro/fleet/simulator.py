@@ -1,24 +1,29 @@
 """Discrete-time fleet queueing simulator, numpy-vectorized over Monte Carlo
-seeds, with heterogeneous per-shape replica pools.
+seeds, with heterogeneous per-shape replica pools and multi-class workloads
+under pluggable scheduling disciplines.
 
-Each time bin: arrivals join a shared queue (admission control drops overflow
-*at arrival*, before it can distort anyone's waiting time); the queue is
-drained across the fleet's pools in cost-efficiency order — the FIFO head goes
-to the cheapest capacity first; every ready replica drains back-to-back batches
-whose service time comes from its pool's ``ServiceModel`` (roofline-derived);
-the autoscaling policy observes (arrival rate, queue, utilization, per-pool
-replicas) and sets per-pool replica targets. Scale-downs first cancel pending
-cold-starts newest-first (a cancelled launch stops billing immediately), then
-shrink ready replicas; scale-ups become ready only after the pool's cold-start
-delay and are billed from their launch bin — cold capacity costs money before
-it serves anything.
+Each time bin: per-class arrivals join the queue (admission control drops
+overflow *at arrival*, before it can distort anyone's waiting time, shedding
+the classes the discipline values least first); the backlog is drained across
+the fleet's pools in cost-efficiency order — the head of the queue goes to the
+cheapest capacity first — while the scheduling discipline (FIFO / strict
+priority / EDF, ``repro.fleet.discipline``) decides *which class's* cohorts
+that capacity serves; every ready replica drains back-to-back batches whose
+service time comes from its pool's ``ServiceModel`` (roofline-derived); the
+autoscaling policy observes (arrival rate, per-class queue, utilization,
+per-pool replicas) and sets per-pool replica targets. Scale-downs first cancel
+pending cold-starts newest-first (a cancelled launch stops billing
+immediately), then shrink ready replicas; scale-ups become ready only after
+the pool's cold-start delay and are billed from their launch bin — cold
+capacity costs money before it serves anything.
 
-Latency is exact, not fluid: per-bin served masses feed the request-cohort
-model (``repro.fleet.cohort``), which recovers per-request FIFO sojourns and
-deadline misses from cumulative arithmetic. All per-bin state is an
-(n_seeds,) or (n_seeds, n_pools) vector, so one pass simulates every Monte
-Carlo draw of the trace at once — the fleet-level analogue of the paper's
-nested-loop simulation.
+Latency is exact, not fluid: per-slot per-class served masses feed the
+request-cohort model (``repro.fleet.cohort``), which recovers per-request
+sojourns and deadline misses from per-class cumulative arithmetic (service
+within a class is FIFO under every discipline). All per-bin state is an
+(n_seeds,) / (n_seeds, n_pools) / (n_seeds, n_classes) vector, so one pass
+simulates every Monte Carlo draw of the trace at once — the fleet-level
+analogue of the paper's nested-loop simulation.
 """
 from __future__ import annotations
 
@@ -28,9 +33,10 @@ from typing import Optional
 import numpy as np
 
 from repro.core.cost_model import dollar_cost
-from repro.fleet.cohort import cohort_metrics
+from repro.fleet.cohort import multiclass_cohort_metrics
+from repro.fleet.discipline import CohortQueue, get_discipline
 from repro.fleet.traces import Trace
-from repro.fleet.workload import ServiceModel
+from repro.fleet.workload import ServiceModel, Workload
 
 _EPS = 1e-12
 
@@ -90,11 +96,12 @@ class FleetConfig:
 class FleetObs:
     """What a policy sees at the end of a bin (arrays are (n_seeds,) unless
     noted). Homogeneous policies read the aggregate fields; per-pool policies
-    read ``pool_replicas``/``pool_in_flight``/``pools``."""
+    read ``pool_replicas``/``pool_in_flight``/``pools``; class-aware policies
+    read ``class_queue``/``class_arrival_rate``/``classes``."""
     t_s: float                  # sim time at bin end
     dt_s: float
-    arrival_rate: np.ndarray    # requests/s observed this bin
-    queue: np.ndarray           # backlog after serving/drops
+    arrival_rate: np.ndarray    # requests/s observed this bin (all classes)
+    queue: np.ndarray           # backlog after serving/drops (all classes)
     replicas: np.ndarray        # ready replicas this bin (all pools)
     in_flight: np.ndarray       # replicas still cold-starting (all pools)
     utilization: np.ndarray     # served / capacity this bin, in [0, 1]
@@ -102,14 +109,17 @@ class FleetObs:
     pool_replicas: np.ndarray = None    # (n_seeds, n_pools) ready per pool
     pool_in_flight: np.ndarray = None   # (n_seeds, n_pools) cold-starting
     pools: tuple = ()                   # the fleet's PoolConfigs
+    class_queue: np.ndarray = None      # (n_seeds, n_classes) backlog
+    class_arrival_rate: np.ndarray = None  # (n_seeds, n_classes) req/s
+    classes: tuple = ()                 # the workload's RequestClasses
 
 
 @dataclass
 class SimResult:
-    trace: Trace
+    trace: Trace                # aggregate stream (multi-class: the sum)
     fleet: FleetConfig
     policy_name: str
-    slo_s: float
+    slo_s: float                # multi-class: the tightest class SLO
     # (n_seeds, n_bins) traces:
     arrivals: np.ndarray
     admitted: np.ndarray        # arrivals minus admission-control drops
@@ -119,15 +129,30 @@ class SimResult:
     replicas: np.ndarray        # ready (serving) replicas, all pools
     billed_replicas: np.ndarray  # ready + cold-starting (the cloud bill)
     latency_s: np.ndarray       # per-bin mean sojourn of served reqs (exact)
-    ok_served: np.ndarray       # served mass meeting the SLO deadline (exact)
+    ok_served: np.ndarray       # served mass meeting its class SLO (exact)
     utilization: np.ndarray
     # (n_seeds, n_bins, n_pools) traces:
     pool_replicas: np.ndarray
     pool_billed: np.ndarray
     pool_served: np.ndarray
-    # exact pooled per-request sojourn distribution (across seeds):
+    # exact pooled per-request sojourn distribution (across seeds/classes):
     sojourn_values: np.ndarray = field(repr=False, default=None)
     sojourn_weights: np.ndarray = field(repr=False, default=None)
+    # multi-class accounting (single-class sims carry one class):
+    workload: Workload = field(repr=False, default=None)
+    discipline: str = "fifo"
+    # (n_seeds, n_bins, n_classes) traces:
+    class_admitted: np.ndarray = field(repr=False, default=None)
+    class_served: np.ndarray = field(repr=False, default=None)
+    class_dropped: np.ndarray = field(repr=False, default=None)
+    class_queue: np.ndarray = field(repr=False, default=None)
+    class_ok: np.ndarray = field(repr=False, default=None)
+    # per-class exact sojourn distributions: ((values, weights), ...):
+    class_sojourns: tuple = field(repr=False, default=())
+
+    @property
+    def classes(self) -> tuple:
+        return self.workload.classes if self.workload is not None else ()
 
     @property
     def service(self) -> ServiceModel:
@@ -170,15 +195,37 @@ def _initial_replicas(pool: PoolConfig, rate0: float, provision: bool) -> int:
                        else pool.min_replicas, pool.max_replicas))
 
 
-def simulate_fleet(trace: Trace, fleet: FleetConfig, policy, *,
-                   slo_s: float, max_queue: float = None) -> SimResult:
-    """Run ``policy`` against ``trace`` on a heterogeneous ``fleet``.
+def simulate_fleet(workload, fleet: FleetConfig, policy, *,
+                   slo_s: float = None, max_queue: float = None,
+                   discipline="fifo") -> SimResult:
+    """Run ``policy`` against a ``Workload`` (or bare ``Trace``) on a
+    heterogeneous ``fleet``.
+
+    ``workload`` is either a multi-class ``Workload`` (per-class SLOs come
+    from its ``RequestClass``es; ``slo_s`` must be omitted) or a single-class
+    ``Trace`` (``slo_s`` required, the pre-multi-class calling convention).
+    ``discipline`` picks the scheduling order across classes — ``"fifo"``,
+    ``"priority"``, ``"edf"`` or a ``Discipline`` instance; single-class
+    workloads behave identically under all of them.
 
     ``max_queue`` bounds the backlog (admission control): overflow is dropped
-    on arrival and counted as an SLO violation. ``None`` = unbounded (or the
-    fleet's own ``max_queue``). Per-pool policies (``policy.per_pool``) return
+    on arrival — shedding the classes the discipline values least first — and
+    counted as an SLO violation. ``None`` = unbounded (or the fleet's own
+    ``max_queue``). Per-pool policies (``policy.per_pool``) return
     (n_seeds, n_pools) targets; plain policies require a single-pool fleet.
     """
+    if isinstance(workload, Trace):
+        if slo_s is None:
+            raise ValueError("slo_s is required when simulating a bare Trace")
+        workload = Workload.from_trace(workload, slo_s)
+    elif slo_s is not None:
+        raise ValueError("slo_s comes from the Workload's RequestClasses; "
+                         "pass one or the other, not both")
+    disc = get_discipline(discipline)
+    classes = workload.classes
+    C = len(classes)
+    slos = workload.slos()
+    trace = workload.total_trace()
     pools = fleet.pools
     P = len(pools)
     per_pool = bool(getattr(policy, "per_pool", False))
@@ -200,13 +247,17 @@ def simulate_fleet(trace: Trace, fleet: FleetConfig, policy, *,
     ready = np.zeros((S, P))
     for p, pc in enumerate(pools):
         ready[:, p] = _initial_replicas(pc, trace.rate[0], p == order[0])
-    queue = np.zeros(S)
+    cq = CohortQueue(disc, classes, S, T, dt)   # per-class queue state
+    arrivals_c = workload.arrivals.astype(float)  # (S, T, C)
     pend = np.zeros((S, T + max_cb + 2, P))   # scale-ups maturing per bin
     in_flight = np.zeros((S, P))              # running sum of future pend
 
     slot_served = np.zeros((S, T, P))         # per (bin, drain-rank) mass
+    slot_class = np.zeros((S, T * P, C))      # ...split across classes
     slot_bt = np.zeros((S, T, P))             # batch time of that slot
     admitted = np.zeros((S, T))
+    cls = {k: np.zeros((S, T, C)) for k in
+           ("admitted", "dropped", "queue")}
     rec = {k: np.zeros((S, T)) for k in
            ("served", "dropped", "queue", "replicas", "billed", "util")}
     pool_rep = np.zeros((S, T, P))
@@ -216,18 +267,29 @@ def simulate_fleet(trace: Trace, fleet: FleetConfig, policy, *,
         matured = pend[:, t, :]
         ready += matured
         in_flight -= matured
-        arr = trace.arrivals[:, t].astype(float)
-        queue = queue + arr
+        arr_c = arrivals_c[:, t, :]
+        arr = arr_c.sum(axis=1)
         # admission control happens at arrival: a dropped request never queues,
-        # so it cannot inflate the sojourn of requests that are actually served
-        drop = np.zeros(S)
+        # so it cannot inflate the sojourn of requests that are actually
+        # served; overflow is shed from the arriving cohorts the discipline
+        # would have served last (largest key first)
+        drop_c = np.zeros((S, C))
         if max_queue is not None:
-            drop = np.maximum(queue - max_queue, 0.0)
-            queue -= drop
-        admitted[:, t] = arr - drop
+            over = np.maximum(cq.backlog().sum(axis=1) + arr - max_queue, 0.0)
+            for c in cq.drop_order(t):
+                d = np.minimum(arr_c[:, c], over)
+                drop_c[:, c] = d
+                over = over - d
+        adm_c = arr_c - drop_c
+        cq.admit(t, adm_c)
+        admitted[:, t] = adm_c.sum(axis=1)
+        cls["admitted"][:, t, :] = adm_c
+        cls["dropped"][:, t, :] = drop_c
+        drop = drop_c.sum(axis=1)
 
-        # drain the shared queue across pools, cheapest capacity first
-        remaining = queue
+        # drain the shared queue across pools, cheapest capacity first; the
+        # discipline decides which class's cohorts each slot's mass comes from
+        remaining = cq.backlog().sum(axis=1)
         capacity = np.zeros(S)
         for rank, p in enumerate(order):
             t_fixed, t_unit, max_b = svc_terms[p]
@@ -238,12 +300,16 @@ def simulate_fleet(trace: Trace, fleet: FleetConfig, policy, *,
                                           where=has)), 1.0, max_b)
             bt = np.maximum(t_fixed + b * t_unit, _EPS)
             cap = np.where(has, n * b / bt, 0.0) * dt
-            s_p = np.minimum(remaining, cap)
+            split = cq.serve(t, np.minimum(remaining, cap))
+            s_p = split.sum(axis=1)
+            slot_class[:, t * P + rank, :] = split
             remaining = remaining - s_p
             capacity += cap
             slot_served[:, t, rank] = s_p
             slot_bt[:, t, rank] = bt
-        queue = remaining
+        queue_c = cq.backlog()
+        queue = queue_c.sum(axis=1)
+        cls["queue"][:, t, :] = queue_c
         served = slot_served[:, t, :].sum(axis=1)
 
         pool_rep[:, t, :] = ready
@@ -254,7 +320,9 @@ def simulate_fleet(trace: Trace, fleet: FleetConfig, policy, *,
             utilization=np.divide(served, capacity, out=np.zeros(S),
                                   where=capacity > 0),
             service=pools[0].service, pool_replicas=pool_rep[:, t, :],
-            pool_in_flight=in_flight.copy(), pools=pools)
+            pool_in_flight=in_flight.copy(), pools=pools,
+            class_queue=queue_c, class_arrival_rate=arr_c / dt,
+            classes=classes)
         target = np.asarray(policy.decide(t, obs), float)
         if target.ndim == 1:
             target = target[:, None]
@@ -293,40 +361,57 @@ def simulate_fleet(trace: Trace, fleet: FleetConfig, policy, *,
         rec["billed"][:, t] = pool_billed[:, t, :].sum(axis=1)
         rec["util"][:, t] = obs.utilization
 
-    # exact per-request FIFO latency from the cohort model: slots are (bin,
-    # drain-rank) pairs, time-ordered, matching how the queue head was assigned
-    cm = cohort_metrics(admitted, slot_served.reshape(S, T * P),
-                        np.repeat(np.arange(T), P),
-                        slot_bt.reshape(S, T * P), dt, slo_s)
-    slot_ok = cm.ok_served.reshape(S, T, P)
-    slot_mean = cm.mean_sojourn.reshape(S, T, P)
+    # exact per-request latency from the cohort model, class by class: slots
+    # are (bin, drain-rank) pairs, time-ordered, matching how the queue head
+    # was assigned; within a class every discipline serves FIFO, so the
+    # per-class cumulative served counts recover exact sojourns
+    slot_bin = np.repeat(np.arange(T), P)
+    flat_bt = slot_bt.reshape(S, T * P)
+    cms = multiclass_cohort_metrics(cls["admitted"], slot_class, slot_bin,
+                                    flat_bt, dt, slos)
+    class_ok = np.stack([cm.ok_served.reshape(S, T, P).sum(axis=2)
+                         for cm in cms], axis=2)
+    class_served = slot_class.reshape(S, T, P, C).sum(axis=2)
+    # per-bin mean sojourn pooled over classes and drain ranks
+    mass_soj = sum((cm.mean_sojourn * slot_class[:, :, c]).reshape(S, T, P)
+                   .sum(axis=2) for c, cm in enumerate(cms))
     served_all = rec["served"]
-    lat = np.divide((slot_mean * slot_served).sum(axis=2), served_all,
+    lat = np.divide(mass_soj, served_all,
                     out=np.zeros((S, T)), where=served_all > 0)
     # slots are drain-rank-ordered; report per-pool served in pool order
     rank_of = np.argsort(np.asarray(order))
 
     return SimResult(
-        trace=trace, fleet=fleet, policy_name=policy.name, slo_s=slo_s,
+        trace=trace, fleet=fleet, policy_name=policy.name,
+        slo_s=float(slos.min()),
         arrivals=trace.arrivals.astype(float), admitted=admitted,
         served=served_all, dropped=rec["dropped"], queue=rec["queue"],
         replicas=rec["replicas"], billed_replicas=rec["billed"],
-        latency_s=lat, ok_served=slot_ok.sum(axis=2),
+        latency_s=lat, ok_served=class_ok.sum(axis=2),
         utilization=rec["util"], pool_replicas=pool_rep,
         pool_billed=pool_billed, pool_served=slot_served[:, :, rank_of],
-        sojourn_values=cm.sojourn_values, sojourn_weights=cm.sojourn_weights)
+        sojourn_values=np.concatenate([cm.sojourn_values for cm in cms]),
+        sojourn_weights=np.concatenate([cm.sojourn_weights for cm in cms]),
+        workload=workload, discipline=disc.name,
+        class_admitted=cls["admitted"], class_served=class_served,
+        class_dropped=cls["dropped"], class_queue=cls["queue"],
+        class_ok=class_ok,
+        class_sojourns=tuple((cm.sojourn_values, cm.sojourn_weights)
+                             for cm in cms))
 
 
-def simulate(trace: Trace, service: ServiceModel, policy, *,
-             slo_s: float, cold_start_s: float = 30.0,
+def simulate(workload, service: ServiceModel, policy, *,
+             slo_s: float = None, cold_start_s: float = 30.0,
              max_queue: float = None, initial_replicas: int = None,
-             min_replicas: int = 0, max_replicas: int = 1024) -> SimResult:
-    """Homogeneous fleet: run ``policy`` against ``trace`` on replicas of
-    ``service``. A thin wrapper over ``simulate_fleet`` with one pool."""
+             min_replicas: int = 0, max_replicas: int = 1024,
+             discipline="fifo") -> SimResult:
+    """Homogeneous fleet: run ``policy`` against a ``Trace`` or ``Workload``
+    on replicas of ``service``. A thin wrapper over ``simulate_fleet`` with
+    one pool."""
     # The policy may carry its own shape choice (predictive: recommend()).
     service = getattr(policy, "service", None) or service
     pool = PoolConfig(service=service, cold_start_s=cold_start_s,
                       min_replicas=min_replicas, max_replicas=max_replicas,
                       initial_replicas=initial_replicas)
-    return simulate_fleet(trace, FleetConfig((pool,), max_queue=max_queue),
-                          policy, slo_s=slo_s)
+    return simulate_fleet(workload, FleetConfig((pool,), max_queue=max_queue),
+                          policy, slo_s=slo_s, discipline=discipline)

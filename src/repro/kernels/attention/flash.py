@@ -9,7 +9,6 @@ contribution underflows to zero in the online rescale).
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp

@@ -25,7 +25,7 @@ from repro.core.cost_model import V5E, roofline
 from repro.core.hlo_analysis import analyze_compiled
 from repro.distributed.sharding import make_rules
 from repro.launch.mesh import make_production_mesh
-from repro.launch.steps import StepBuilder, batch_sharding, cast_tree
+from repro.launch.steps import StepBuilder
 
 
 # --- optimization knobs for the §Perf hillclimb (all default-off) -----------

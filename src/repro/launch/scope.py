@@ -11,7 +11,6 @@ if "--analytic" in os.sys.argv or "--lm" in os.sys.argv:
 import argparse
 import json
 
-import numpy as np
 
 
 def run_mset(grid_name: str, reps: int, out: str):
@@ -60,8 +59,8 @@ def run_mset(grid_name: str, reps: int, out: str):
 
 def run_lm(arch: str, shape_name: str, out: str):
     from repro.configs import SHAPES, get_config, shape_applicable
-    from repro.core import (CATALOG, Constraint, ContainerStress, recommend)
-    from repro.launch.dryrun import lower_cell, probe_cost
+    from repro.core import CATALOG, Constraint, recommend
+    from repro.launch.dryrun import probe_cost
     from repro.core.cost_model import roofline, dollar_cost
     from repro.core.scoping import CellResult
 
@@ -71,7 +70,6 @@ def run_lm(arch: str, shape_name: str, out: str):
     if not ok:
         print(f"skip: {why}")
         return
-    cs = ContainerStress()
     rows = []
     for cshape in CATALOG:
         if cshape.chips < 64:

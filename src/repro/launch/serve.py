@@ -7,7 +7,6 @@ from __future__ import annotations
 import argparse
 import time
 from dataclasses import dataclass
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -6,15 +6,14 @@ abstract param/cache trees.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ArchConfig, ShapeSpec, input_specs
-from repro.distributed.sharding import ShardingRules, is_box, unbox_values
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.distributed.sharding import ShardingRules, unbox_values
 from repro.models import build_model
 from repro.optim import AdamWConfig
 from repro.optim import adamw

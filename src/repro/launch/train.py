@@ -14,16 +14,14 @@ from dataclasses import dataclass, field
 from typing import Any, Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import Checkpointer
 from repro.configs import get_config
 from repro.data import TokenPipeline
 from repro.distributed.fault import FaultInjector, StepWatchdog, loss_is_bad
-from repro.distributed.sharding import make_rules, unbox_values
+from repro.distributed.sharding import make_rules
 from repro.launch.mesh import make_dev_mesh
-from repro.launch.steps import StepBuilder, batch_sharding
+from repro.launch.steps import StepBuilder
 from repro.optim import AdamWConfig, adamw, warmup_cosine
 
 

@@ -5,8 +5,7 @@ axes); apply takes the plain-value tree.
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -257,7 +256,6 @@ def attention(cfg: ArchConfig, p, x, rules: ShardingRules, *, mode: str,
     Returns (out, new_cache_or_None).
     """
     dt = x.dtype
-    B = x.shape[0]
     H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
 
     if mode in ("causal", "bidir", "cross"):

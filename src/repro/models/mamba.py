@@ -7,7 +7,6 @@ in fp32; projections in the model dtype.
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

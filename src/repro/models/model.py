@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.distributed.sharding import Box, ShardingRules, is_box, unbox_axes, unbox_values
+from repro.distributed.sharding import ShardingRules, is_box, unbox_values
 from repro.models import transformer
 
 

@@ -18,7 +18,6 @@ from __future__ import annotations
 
 import inspect
 import math
-from functools import partial
 from typing import Optional
 
 import jax

@@ -14,7 +14,6 @@ executed with `lax.scan` (compact HLO, fast compiles, remat per block).
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Any, Optional
 
 import jax

@@ -7,7 +7,6 @@ observations sorted by their vector norm and sampled equidistantly.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 F32 = jnp.float32

@@ -20,7 +20,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.similarity import similarity, similarity_ref
+from repro.kernels.similarity import similarity
 from repro.mset.memory_vectors import build_memory_matrix
 
 F32 = jnp.float32

@@ -5,7 +5,6 @@ compute under --xla_tpu_enable_async_collective_fusion).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable
 
 import jax

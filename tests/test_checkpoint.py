@@ -1,7 +1,5 @@
 """Checkpointer: atomic save/restore, keep-N GC, async, corruption fallback."""
-import json
 import os
-import shutil
 
 import jax
 import jax.numpy as jnp

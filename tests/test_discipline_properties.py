@@ -1,0 +1,117 @@
+"""Hypothesis property tests for the scheduling disciplines.
+
+(a) conservation/causality/work-conservation under every discipline,
+(b) EDF feasibility dominance over FIFO (EDF optimality),
+(c) single-/identical-class degeneracy to FIFO,
+(d) strict priority never hurts the top-priority class vs FIFO.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.fleet import (DISCIPLINES, RequestClass, multiclass_cohort_metrics,
+                         split_service)
+
+DT = 1.0
+
+
+@st.composite
+def _case(draw, max_T=12, max_C=3, max_arr=4, max_cap=8):
+    T = draw(st.integers(2, max_T))
+    C = draw(st.integers(1, max_C))
+    S = 2
+    adm = draw(st.lists(st.integers(0, max_arr), min_size=S * T * C,
+                        max_size=S * T * C))
+    cap = draw(st.lists(st.integers(0, max_cap), min_size=S * T,
+                        max_size=S * T))
+    slos = draw(st.lists(st.sampled_from([1.0, 2.0, 3.5, 8.0]), min_size=C,
+                         max_size=C))
+    prios = draw(st.permutations(list(range(C))))
+    classes = tuple(RequestClass(f"c{i}", slos[i], priority=prios[i])
+                    for i in range(C))
+    return (np.array(adm, float).reshape(S, T, C),
+            np.array(cap, float).reshape(S, T), classes)
+
+
+@settings(max_examples=60, deadline=None)
+@given(_case(), st.sampled_from(sorted(DISCIPLINES)))
+def test_property_conservation_and_causality(case, disc):
+    adm, cap, classes = case
+    S, T, C = adm.shape
+    served = split_service(disc, classes, adm, cap, np.arange(T), DT)
+    assert (served >= -1e-9).all()
+    # conservation: total served per class never exceeds admitted, and the
+    # leftover backlog is exactly admitted - served
+    tot_served = served.sum(axis=1)
+    tot_adm = adm.sum(axis=1)
+    assert (tot_served <= tot_adm + 1e-9).all()
+    # causality: cumulative served by slot k <= cumulative admitted by bin k
+    cum_s = np.cumsum(served, axis=1)
+    cum_a = np.cumsum(adm, axis=1)
+    assert (cum_s <= cum_a + 1e-9).all()
+    # work conservation: each slot serves min(capacity, backlog before it)
+    tot_s = served.sum(axis=2)
+    prev = np.concatenate([np.zeros((S, 1)),
+                           np.cumsum(tot_s, axis=1)[:, :-1]], axis=1)
+    backlog = cum_a.sum(axis=2) - prev
+    np.testing.assert_allclose(tot_s, np.minimum(cap, backlog), atol=1e-9)
+
+
+def _misses(disc, classes, adm, cap, T):
+    """Deadline misses = requests served past their SLO + never served.
+    Service itself is instantaneous (bt ~ 0): the property is about
+    *queueing* misses, which the discipline controls."""
+    served = split_service(disc, classes, adm, cap, np.arange(T), DT)
+    bt = np.full(cap.shape, 1e-9)
+    cms = multiclass_cohort_metrics(adm, served, np.arange(T), bt, DT,
+                                    [c.slo_s for c in classes])
+    late = sum(float((served[:, :, c] - cm.ok_served).sum())
+               for c, cm in enumerate(cms))
+    unserved = float(adm.sum() - served.sum())
+    return late + unserved
+
+
+@settings(max_examples=60, deadline=None,
+          suppress_health_check=[hypothesis.HealthCheck.filter_too_much,
+                                 hypothesis.HealthCheck.too_slow])
+@given(_case(max_C=2, max_T=8, max_arr=2, max_cap=10))
+def test_property_edf_feasibility_dominance(case):
+    """If FIFO schedules a trace with zero deadline misses, EDF does too
+    (EDF optimality). The converse is false — that asymmetry is the whole
+    point of the discipline. Generation is biased toward ample capacity so
+    FIFO-feasible traces are common enough to sample."""
+    adm, cap, classes = case
+    T = adm.shape[1]
+    hypothesis.assume(_misses("fifo", classes, adm, cap, T) < 1e-6)
+    assert _misses("edf", classes, adm, cap, T) < 1e-6
+
+
+@settings(max_examples=60, deadline=None)
+@given(_case())
+def test_property_single_and_identical_class_degenerate_to_fifo(case):
+    adm, cap, classes = case
+    S, T, C = adm.shape
+    # identical SLOs and priorities: every discipline must split identically
+    same = tuple(RequestClass(c.name, 2.0, priority=0) for c in classes)
+    ref = split_service("fifo", same, adm, cap, np.arange(T), DT)
+    for d in ("priority", "edf"):
+        np.testing.assert_allclose(
+            split_service(d, same, adm, cap, np.arange(T), DT), ref,
+            atol=1e-9)
+
+
+@settings(max_examples=60, deadline=None)
+@given(_case(max_C=3))
+def test_property_top_priority_class_never_worse_under_priority(case):
+    """Strict priority dominates FIFO for the most critical class: its
+    cumulative served curve (and hence every request's sojourn) can only
+    improve when it always goes first."""
+    adm, cap, classes = case
+    T = adm.shape[1]
+    top = int(np.argmin([c.priority for c in classes]))
+    fifo = split_service("fifo", classes, adm, cap, np.arange(T), DT)
+    prio = split_service("priority", classes, adm, cap, np.arange(T), DT)
+    assert (np.cumsum(prio[:, :, top], axis=1)
+            >= np.cumsum(fifo[:, :, top], axis=1) - 1e-9).all()

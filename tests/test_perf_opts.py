@@ -3,7 +3,6 @@ they get their own equivalence tests)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.distributed import make_rules
@@ -82,7 +81,6 @@ def test_elasticity_plan():
     from repro.core import Constraint
     from repro.core.catalog import CATALOG
     from repro.core.recommender import elasticity_plan
-    from repro.core.surfaces import ResponseSurface
     import numpy as np
 
     # synthetic per-shape surfaces: t = C * n_signals / chips

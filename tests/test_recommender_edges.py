@@ -1,7 +1,6 @@
 """Constraint / recommender edge cases (degenerate probes, HBM bound,
 duplicate-cost ties, elasticity plans with infeasible regions)."""
 import numpy as np
-import pytest
 
 from repro.core import (CellResult, CloudShape, Constraint, RooflineTerms,
                         elasticity_plan, feasible_ranking, get_shape,

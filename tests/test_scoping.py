@@ -1,6 +1,5 @@
 """ContainerStress engine: cost model, HLO parsing, surfaces, recommender."""
 import numpy as np
-import pytest
 
 from repro.core import (CATALOG, CellResult, Constraint, ContainerStress,
                         RooflineTerms, dollar_cost, fit_response_surface,

@@ -3,11 +3,10 @@ import json
 import os
 import subprocess
 import sys
-import textwrap
 
 import pytest
 
-from repro.distributed.sharding import Box, ShardingRules
+from repro.distributed.sharding import ShardingRules
 
 
 class FakeMesh:

@@ -1,12 +1,10 @@
 """End-to-end behaviour tests: training convergence, fault-tolerant restart,
 straggler detection, serving, and the full paper workflow (TPSS -> MSET2 ->
 SPRT -> scoping -> recommendation)."""
-import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.distributed.fault import FaultInjector, StepWatchdog
 from repro.launch.train import TrainJob, train

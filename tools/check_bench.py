@@ -1,0 +1,158 @@
+"""Benchmark regression gate: compare a freshly produced ``BENCH_fleet.json``
+against the committed baseline and fail when SLO attainment drops or $/hr
+rises beyond tolerance.
+
+The fleet benchmark is fully seeded, so fresh and baseline numbers are
+expected to match almost exactly; the tolerances only absorb float/platform
+drift. Gated invariants:
+
+* every baseline record (policy, discipline, trace, shapes) still exists,
+  its ``slo_attainment`` has not dropped more than ``--attain-tol`` (absolute)
+  and its ``usd_per_hour`` has not risen more than ``--cost-tol`` (relative);
+* the tiered-SLA sweep still finds a feasible fleet per discipline, no
+  costlier than baseline beyond tolerance, meeting the attainment bar;
+* the headline invariant holds: EDF or strict priority meets the tiered SLOs
+  at strictly lower cost than FIFO.
+
+Usage (CI runs exactly this):
+
+    python tools/check_bench.py BENCH_fleet.json \\
+        --baseline benchmarks/baselines/fleet.json
+
+After an intentional perf/cost change, refresh the baseline with
+``--write-baseline`` and commit the result.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+RECORD_KEY = ("policy", "discipline", "trace", "shapes")
+VOLATILE = ("wall_clock_s", "total_wall_clock_s")
+
+
+def _key(rec: dict) -> tuple:
+    return tuple(rec.get(k) for k in RECORD_KEY)
+
+
+def _normalize(bench: dict) -> dict:
+    """Strip wall-clock timings (machine-dependent) before writing/storing."""
+    out = {k: v for k, v in bench.items() if k not in VOLATILE}
+    out["records"] = [{k: v for k, v in rec.items() if k not in VOLATILE}
+                      for rec in bench.get("records", [])]
+    return out
+
+
+def compare(fresh: dict, base: dict, attain_tol: float,
+            cost_tol: float) -> list:
+    """Return a list of human-readable regression strings (empty = green)."""
+    problems = []
+    fresh_by_key = {_key(r): r for r in fresh.get("records", [])}
+    for brec in base.get("records", []):
+        k = _key(brec)
+        frec = fresh_by_key.get(k)
+        label = "/".join(str(x) for x in k)
+        if frec is None:
+            problems.append(f"missing record: {label} (present in baseline)")
+            continue
+        da = brec["slo_attainment"] - frec["slo_attainment"]
+        if da > attain_tol:
+            problems.append(
+                f"{label}: SLO attainment dropped "
+                f"{brec['slo_attainment']:.4f} -> "
+                f"{frec['slo_attainment']:.4f} (tol {attain_tol})")
+        floor = max(brec["usd_per_hour"], 1e-9)
+        if frec["usd_per_hour"] > floor * (1.0 + cost_tol):
+            problems.append(
+                f"{label}: $/hr rose {brec['usd_per_hour']:.2f} -> "
+                f"{frec['usd_per_hour']:.2f} (tol {cost_tol * 100:.0f}%)")
+
+    btier = base.get("tiered_sla", {})
+    ftier = fresh.get("tiered_sla", {})
+    bar = btier.get("attainment_bar", 0.99)
+    bcheap = btier.get("cheapest_feasible", {})
+    fcheap = ftier.get("cheapest_feasible", {})
+    for disc, brec in bcheap.items():
+        frec = fcheap.get(disc)
+        if frec is None:
+            problems.append(f"tiered-sla: no feasible {disc} fleet anymore "
+                            f"(baseline: {brec['replicas']} replicas)")
+            continue
+        if frec["worst_class_attainment"] < bar - attain_tol:
+            problems.append(
+                f"tiered-sla/{disc}: worst class attainment "
+                f"{frec['worst_class_attainment']:.4f} below the "
+                f"{bar:.2f} bar")
+        if frec["usd_per_hour"] > brec["usd_per_hour"] * (1.0 + cost_tol):
+            problems.append(
+                f"tiered-sla/{disc}: cheapest feasible $/hr rose "
+                f"{brec['usd_per_hour']:.2f} -> {frec['usd_per_hour']:.2f} "
+                f"(tol {cost_tol * 100:.0f}%)")
+    # the headline result this PR pins: a deadline-aware discipline beats
+    # capacity-equivalent FIFO on cost while meeting every tier's SLO
+    if {"fifo", "edf", "priority"} <= set(fcheap):
+        fifo_usd = fcheap["fifo"]["usd_per_hour"]
+        best = min(fcheap["edf"]["usd_per_hour"],
+                   fcheap["priority"]["usd_per_hour"])
+        if not best < fifo_usd:
+            problems.append(
+                "tiered-sla: EDF/priority no longer beat FIFO on cost "
+                f"(fifo ${fifo_usd:.2f}/hr, best deadline-aware "
+                f"${best:.2f}/hr)")
+    elif bcheap:
+        problems.append("tiered-sla: fresh results missing a discipline "
+                        f"(have {sorted(fcheap)})")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail when fleet benchmark results regress vs baseline")
+    ap.add_argument("fresh", help="freshly produced BENCH_fleet.json")
+    ap.add_argument("--baseline", default="benchmarks/baselines/fleet.json")
+    ap.add_argument("--attain-tol", type=float, default=0.02,
+                    help="max absolute SLO-attainment drop (default 0.02)")
+    ap.add_argument("--cost-tol", type=float, default=0.08,
+                    help="max relative $/hr increase (default 8%%)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="refresh the baseline from the fresh results "
+                         "(after an intentional perf/cost change)")
+    args = ap.parse_args(argv)
+
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    if args.write_baseline:
+        with open(args.baseline, "w") as f:
+            json.dump(_normalize(fresh), f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote baseline {args.baseline} "
+              f"({len(fresh.get('records', []))} records)")
+        return 0
+    try:
+        with open(args.baseline) as f:
+            base = json.load(f)
+    except FileNotFoundError:
+        print(f"no baseline at {args.baseline}; run with --write-baseline "
+              "to create one", file=sys.stderr)
+        return 2
+
+    problems = compare(fresh, base, args.attain_tol, args.cost_tol)
+    n_new = len({_key(r) for r in fresh.get("records", [])}
+                - {_key(r) for r in base.get("records", [])})
+    if n_new:
+        print(f"note: {n_new} new record(s) not in the baseline — refresh it "
+              "with --write-baseline to start gating them")
+    if problems:
+        print(f"BENCH REGRESSION ({len(problems)} problem(s)):")
+        for p in problems:
+            print(f"  - {p}")
+        return 1
+    print(f"bench gate green: {len(base.get('records', []))} records and the "
+          "tiered-SLA sweep within tolerance "
+          f"(attain {args.attain_tol}, cost {args.cost_tol * 100:.0f}%)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
