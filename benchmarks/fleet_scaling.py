@@ -3,7 +3,9 @@ per-shape fleets AND mixed-shape fleets), under per-instance-type cloud
 quotas, plus a tiered-SLA multi-class sweep across scheduling disciplines.
 
 For each homogeneous candidate shape, replicas of that shape serve the same
-trace under each autoscaling policy; a mixed v5e-4+v5e-16 fleet runs the
+traces — the four synthetic ``standard_traces`` plus the bundled
+Azure-Functions-style day replayed via ``load_trace_csv`` — under each
+autoscaling policy; a mixed v5e-4+v5e-16 fleet runs the
 heterogeneous predictive policy against the same traces. Every pool is capped
 at ``QUOTA`` replicas (clouds limit instance counts per type), which is what
 makes the comparison honest: a flash crowd can outgrow the small shape's
@@ -35,14 +37,26 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.fleet import (HeterogeneousPredictivePolicy, StaticPolicy,
                          class_table, comparison_table,
                          cost_efficiency_table, default_policies,
-                         mset_scenario, simulate, simulate_fleet,
-                         standard_traces, summarize, tiered_sla_workload)
+                         load_trace_csv, mset_scenario, simulate,
+                         simulate_fleet, standard_traces, summarize,
+                         tiered_sla_workload)
 
 QUOTA = 16              # max replicas per pool (per-instance-type quota)
 COLD_START_S = 60.0
 MIXED_SHAPES = ("v5e-4", "v5e-16")
 DISCIPLINE_SWEEP = ("fifo", "priority", "edf")
 TIERED_ATTAINMENT_BAR = 0.99    # every class must clear this
+REPLAY_CSV = os.path.join(os.path.dirname(__file__), "data",
+                          "azure_functions_day.csv")
+
+
+def replay_traces(mean_rate: float, n_seeds: int):
+    """The bundled Azure-Functions-style day, rescaled so its mean matches
+    the synthetic traces' sustained rate — the ROADMAP's first real-trace
+    step, riding the same policy x shape sweep as ``standard_traces``."""
+    return [load_trace_csv(REPLAY_CSV, rate_col="requests_per_s", dt_s=300.0,
+                           mean_rate_per_s=mean_rate, n_seeds=n_seeds,
+                           seed=11, name="azure-day")]
 
 
 def _record(report, sim, wall_s):
@@ -104,8 +118,9 @@ def run(full: bool = False, scenario=None):
                 cold_start_s=COLD_START_S)
         except ValueError:            # shape infeasible for the SLO
             continue
-        for trace in standard_traces(mean_rate, duration, dt_s=5.0,
-                                     n_seeds=n_seeds):
+        for trace in (standard_traces(mean_rate, duration, dt_s=5.0,
+                                      n_seeds=n_seeds)
+                      + replay_traces(mean_rate, n_seeds)):
             for policy in policies:   # simulate() resets policy state
                 _run(trace, lambda tr, p=policy, s=service: simulate(
                     tr, s, p, slo_s=scenario.slo_s,
@@ -117,8 +132,9 @@ def run(full: bool = False, scenario=None):
     hetero = HeterogeneousPredictivePolicy(
         scenario.rows, scenario.constraint(), scenario.units_per_step, fleet,
         horizon_s=2 * COLD_START_S)
-    for trace in standard_traces(mean_rate, duration, dt_s=5.0,
-                                 n_seeds=n_seeds):
+    for trace in (standard_traces(mean_rate, duration, dt_s=5.0,
+                                  n_seeds=n_seeds)
+                  + replay_traces(mean_rate, n_seeds)):
         _run(trace, lambda tr: simulate_fleet(tr, fleet, hetero,
                                               slo_s=scenario.slo_s))
     return reports, records

@@ -37,12 +37,31 @@ def _design(L: np.ndarray, degree: int) -> np.ndarray:
     return np.stack(cols, axis=1)
 
 
+def _n_cols(k: int, degree: int) -> int:
+    return 1 + k + (k * (k + 1) // 2 if degree >= 2 else 0)
+
+
 def fit_response_surface(names, X, y, degree: int = 2) -> ResponseSurface:
-    """X: (n, k) raw params; y: (n,) positive costs."""
+    """X: (n, k) raw params; y: (n,) positive costs.
+
+    A fit with fewer usable points than design-matrix columns is
+    underdetermined — lstsq would happily return one of infinitely many
+    interpolants (r2 == 1, garbage everywhere off the data). Rather than hand
+    back a surface nothing downstream can trust, degrade to ``degree=1`` when
+    the quadratic is underdetermined, and raise when even the linear fit is.
+    """
     X = np.asarray(X, float)
     y = np.asarray(y, float)
     keep = (y > 0) & np.all(X > 0, axis=1)
     L, ly = np.log(X[keep]), np.log(y[keep])
+    k = L.shape[1]
+    while degree > 1 and len(ly) < _n_cols(k, degree):
+        degree -= 1
+    if len(ly) < _n_cols(k, degree):
+        raise ValueError(
+            f"fit_response_surface: {len(ly)} usable point(s) cannot "
+            f"determine even a degree-1 surface in {k} dim(s) "
+            f"(need >= {_n_cols(k, 1)}); widen the design or drop dims")
     A = _design(L, degree)
     coef, *_ = np.linalg.lstsq(A, ly, rcond=None)
     pred = A @ coef

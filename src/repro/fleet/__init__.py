@@ -3,7 +3,9 @@
 # mixed-shape pools, FIFO/priority/EDF scheduling disciplines, exact
 # per-request latency via the cohort model) -> scaling policy -> per-class
 # SLO/cost report, closing the loop from the paper's Monte Carlo cost
-# surfaces to fleet operating cost.
+# surfaces to fleet operating cost. The tuning subpackage turns the loop on
+# the controller itself: `tune()` autonomously scopes autoscaler/fleet
+# parameters by racing candidate configs through the simulator.
 from repro.fleet.autoscaler import (HeterogeneousPredictivePolicy, Policy,
                                     PredictivePolicy, QueueProportionalPolicy,
                                     ReactivePolicy, StaticPolicy,
@@ -24,8 +26,14 @@ from repro.fleet.scenarios import (Scenario, interactive_batch_workload,
 from repro.fleet.simulator import (FleetConfig, FleetObs, PoolConfig,
                                    SimResult, simulate, simulate_fleet)
 from repro.fleet.traces import (Trace, diurnal_trace, flash_crowd_trace,
-                                poisson_trace, ramp_trace, replay_trace,
-                                standard_traces)
+                                load_trace_csv, poisson_trace, ramp_trace,
+                                replay_trace, standard_traces)
+from repro.fleet.tuning import (CandidateEval, Categorical, Continuous,
+                                Integer, Objective, ParamSpace, RaceResult,
+                                TuningBudget, TuningReport, TuningScenario,
+                                discipline_dim, evaluate_candidates,
+                                exhaustive, pareto_frontier, quota_dims,
+                                race, tune, tuning_scenario)
 from repro.fleet.workload import (RequestClass, ServiceModel, Workload,
                                   service_model_from_cell)
 
@@ -42,6 +50,11 @@ __all__ = [
     "lm_decode_scenario", "mset_scenario", "tiered_sla_workload",
     "FleetConfig", "FleetObs", "PoolConfig", "SimResult", "simulate",
     "simulate_fleet", "Trace", "diurnal_trace", "flash_crowd_trace",
-    "poisson_trace", "ramp_trace", "replay_trace", "standard_traces",
-    "RequestClass", "ServiceModel", "Workload", "service_model_from_cell",
+    "load_trace_csv", "poisson_trace", "ramp_trace", "replay_trace",
+    "standard_traces", "RequestClass", "ServiceModel", "Workload",
+    "service_model_from_cell", "CandidateEval", "Categorical", "Continuous",
+    "Integer", "Objective", "ParamSpace", "RaceResult", "TuningBudget",
+    "TuningReport", "TuningScenario", "discipline_dim",
+    "evaluate_candidates", "exhaustive", "pareto_frontier", "quota_dims",
+    "race", "tune", "tuning_scenario",
 ]

@@ -30,7 +30,13 @@ class Policy:
 
     ``per_pool = True`` marks policies whose ``decide`` returns an
     (n_seeds, n_pools) per-pool target for heterogeneous fleets; plain
-    policies return (n_seeds,) and only drive single-pool fleets."""
+    policies return (n_seeds,) and only drive single-pool fleets.
+
+    Every policy family also declares its tunable knobs: ``param_space()``
+    returns the ``repro.fleet.tuning.ParamSpace`` the autonomous tuner
+    searches, and ``from_params(params, **context)`` instantiates the policy
+    from one sampled point. ``context`` carries whatever the constructor
+    needs beyond the tuned knobs (scoping rows, constraint, fleet...)."""
     name = "policy"
     per_pool = False
     service: ServiceModel = None     # optional shape override (predictive)
@@ -40,6 +46,17 @@ class Policy:
 
     def decide(self, t: int, obs) -> np.ndarray:
         raise NotImplementedError
+
+    @classmethod
+    def param_space(cls):
+        """The tunable-knob space of this policy family (dims must match the
+        keys ``from_params`` consumes)."""
+        raise NotImplementedError(f"{cls.__name__} declares no param space")
+
+    @classmethod
+    def from_params(cls, params: dict, **context):
+        """Build an instance from one sampled ``param_space()`` point."""
+        raise NotImplementedError(f"{cls.__name__} declares no param space")
 
 
 class _RateForecaster:
@@ -105,6 +122,15 @@ class StaticPolicy(Policy):
     def decide(self, t, obs):
         return np.full_like(obs.replicas, self.n)
 
+    @classmethod
+    def param_space(cls):
+        from repro.fleet.tuning.space import Integer, ParamSpace
+        return ParamSpace((Integer("n_replicas", 1, 64, log=True),))
+
+    @classmethod
+    def from_params(cls, params, **context):
+        return cls(int(params["n_replicas"]))
+
 
 class ReactivePolicy(Policy):
     name = "reactive"
@@ -138,6 +164,28 @@ class ReactivePolicy(Policy):
         self._last[up | down] = obs.t_s
         return target
 
+    @classmethod
+    def param_space(cls):
+        from repro.fleet.tuning.space import Continuous, ParamSpace
+        # lower is parameterized as a fraction of upper so every sampled
+        # point satisfies the constructor's 0 <= lower < upper <= 1
+        return ParamSpace((
+            Continuous("upper", 0.55, 0.95),
+            Continuous("lower_frac", 0.1, 0.8),
+            Continuous("scale_up_frac", 0.2, 1.0),
+            Continuous("scale_down_frac", 0.1, 0.6),
+            Continuous("cooldown_s", 10.0, 600.0, log=True),
+        ))
+
+    @classmethod
+    def from_params(cls, params, **context):
+        upper = float(params["upper"])
+        return cls(upper=upper,
+                   lower=float(params["lower_frac"]) * upper,
+                   scale_up_frac=float(params["scale_up_frac"]),
+                   scale_down_frac=float(params["scale_down_frac"]),
+                   cooldown_s=float(params["cooldown_s"]))
+
 
 class QueueProportionalPolicy(Policy):
     name = "queue-prop"
@@ -149,6 +197,19 @@ class QueueProportionalPolicy(Policy):
     def decide(self, t, obs):
         demand = obs.arrival_rate + _queue_demand(obs, self.drain_s)
         return _replicas_for_rate(demand, obs.service, self.headroom)
+
+    @classmethod
+    def param_space(cls):
+        from repro.fleet.tuning.space import Continuous, ParamSpace
+        return ParamSpace((
+            Continuous("drain_s", 5.0, 120.0, log=True),
+            Continuous("headroom", 0.55, 0.98),
+        ))
+
+    @classmethod
+    def from_params(cls, params, **context):
+        return cls(drain_s=float(params["drain_s"]),
+                   headroom=float(params["headroom"]))
 
 
 class PredictivePolicy(Policy):
@@ -198,6 +259,24 @@ class PredictivePolicy(Policy):
             + _queue_demand(obs, self.horizon_s)
         per = max(self._rate * self.headroom, _EPS)
         return np.ceil(np.maximum(demand, 0.0) / per)
+
+    @classmethod
+    def param_space(cls):
+        from repro.fleet.tuning.space import Continuous, Integer, ParamSpace
+        return ParamSpace((
+            Continuous("horizon_s", 10.0, 600.0, log=True),
+            Integer("window_bins", 3, 48, log=True),
+            Continuous("headroom", 0.55, 0.98),
+        ))
+
+    @classmethod
+    def from_params(cls, params, *, rows, constraint, units_per_step,
+                    max_batch=None, **context):
+        return cls(rows, constraint, units_per_step,
+                   horizon_s=float(params["horizon_s"]),
+                   window_bins=int(params["window_bins"]),
+                   headroom=float(params["headroom"]),
+                   max_batch=max_batch)
 
 
 class HeterogeneousPredictivePolicy(Policy):
@@ -255,7 +334,8 @@ class HeterogeneousPredictivePolicy(Policy):
         """Demand (req/s) from classes too latency-critical for burst pools:
         their SLO is shorter than the burst cold start, so a backlog would
         miss its deadline before burst capacity comes up."""
-        lag = max(self.fleet.pools[i].cold_start_s for i in self.burst_idx)
+        lag = max(self.fleet.pools[i].cold_start_mean_s
+                  for i in self.burst_idx)
         crit = np.array([c.slo_s <= lag for c in obs.classes])
         if not crit.any():
             return np.zeros_like(obs.queue)
@@ -293,6 +373,25 @@ class HeterogeneousPredictivePolicy(Policy):
                                            base_pool.min_replicas,
                                            base_pool.max_replicas)
         return target
+
+    @classmethod
+    def param_space(cls):
+        from repro.fleet.tuning.space import Continuous, Integer, ParamSpace
+        return ParamSpace((
+            Continuous("horizon_s", 10.0, 600.0, log=True),
+            Integer("window_bins", 3, 48, log=True),
+            Integer("sustain_bins", 12, 240, log=True),
+            Continuous("headroom", 0.55, 0.98),
+        ))
+
+    @classmethod
+    def from_params(cls, params, *, rows, constraint, units_per_step, fleet,
+                    **context):
+        return cls(rows, constraint, units_per_step, fleet,
+                   horizon_s=float(params["horizon_s"]),
+                   window_bins=int(params["window_bins"]),
+                   sustain_bins=int(params["sustain_bins"]),
+                   headroom=float(params["headroom"]))
 
 
 def default_policies(rows, constraint: Constraint, units_per_step: float,

@@ -44,13 +44,47 @@ _EPS = 1e-12
 @dataclass(frozen=True)
 class PoolConfig:
     """One homogeneous replica pool inside a (possibly mixed) fleet: a shape's
-    service model plus its own cold start and count bounds (cloud quotas)."""
+    service model plus its own cold start and count bounds (cloud quotas).
+
+    ``cold_start_s`` is either a constant (seconds) or a ``(mean_s,
+    jitter_frac)`` pair: each launch event then samples its spin-up delay
+    from a seeded lognormal with that mean and coefficient of variation —
+    real container cold starts are long-tailed, and a cooldown tuned against
+    a deterministic spin-up would be fitted to a fiction. A launch event is
+    one (Monte Carlo seed, bin, pool): replicas a policy grows together in
+    one bin are a batched launch and share that event's draw; draws are
+    independent across bins, pools, and seeds. ``jitter_frac = 0`` is
+    byte-identical to the constant path."""
     service: ServiceModel
-    cold_start_s: float = 30.0
+    cold_start_s: object = 30.0     # float seconds | (mean_s, jitter_frac)
     min_replicas: int = 0
     max_replicas: int = 1024
     initial_replicas: Optional[int] = None
     name: Optional[str] = None
+
+    def __post_init__(self):
+        cs = self.cold_start_s
+        bad = isinstance(cs, (tuple, list)) and len(cs) != 2
+        if not bad:
+            m, j = self.cold_start_mean_s, self.cold_start_jitter
+            bad = not (np.isfinite(m) and m >= 0
+                       and np.isfinite(j) and j >= 0)
+        if bad:
+            raise ValueError(f"pool {self.label!r}: cold_start_s must be "
+                             "non-negative seconds or a (mean_s >= 0, "
+                             f"jitter_frac >= 0) pair, got {cs!r}")
+
+    @property
+    def cold_start_mean_s(self) -> float:
+        if isinstance(self.cold_start_s, (tuple, list)):
+            return float(self.cold_start_s[0])
+        return float(self.cold_start_s)
+
+    @property
+    def cold_start_jitter(self) -> float:
+        if isinstance(self.cold_start_s, (tuple, list)):
+            return float(self.cold_start_s[1])
+        return 0.0
 
     @property
     def label(self) -> str:
@@ -160,7 +194,7 @@ class SimResult:
 
     @property
     def cold_start_s(self) -> float:
-        return self.fleet.pools[0].cold_start_s
+        return self.fleet.pools[0].cold_start_mean_s
 
     @property
     def dt_s(self) -> float:
@@ -197,7 +231,8 @@ def _initial_replicas(pool: PoolConfig, rate0: float, provision: bool) -> int:
 
 def simulate_fleet(workload, fleet: FleetConfig, policy, *,
                    slo_s: float = None, max_queue: float = None,
-                   discipline="fifo") -> SimResult:
+                   discipline="fifo", cold_start_seed: int = 0,
+                   seed_indices=None) -> SimResult:
     """Run ``policy`` against a ``Workload`` (or bare ``Trace``) on a
     heterogeneous ``fleet``.
 
@@ -213,6 +248,15 @@ def simulate_fleet(workload, fleet: FleetConfig, policy, *,
     counted as an SLO violation. ``None`` = unbounded (or the fleet's own
     ``max_queue``). Per-pool policies (``policy.per_pool``) return
     (n_seeds, n_pools) targets; plain policies require a single-pool fleet.
+
+    ``cold_start_seed`` seeds the per-launch spin-up jitter of pools whose
+    ``cold_start_s`` is a (mean, jitter) pair; with only constant cold starts
+    it is unused and the simulation path is byte-identical to earlier
+    revisions. Each Monte Carlo row draws from its own substream keyed by
+    (``cold_start_seed``, absolute seed index, pool), so simulating a seed
+    *slice* of a workload reproduces exactly the draws the full workload
+    would give those rows — ``seed_indices`` (default ``arange(n_seeds)``)
+    names the absolute indices of the rows being simulated.
     """
     if isinstance(workload, Trace):
         if slo_s is None:
@@ -238,8 +282,39 @@ def simulate_fleet(workload, fleet: FleetConfig, policy, *,
     order = fleet.drain_order()
     S, T = trace.arrivals.shape
     dt = trace.dt_s
-    cold_bins = [max(int(round(p.cold_start_s / dt)), 0) for p in pools]
-    max_cb = max(cold_bins)
+    cold_bins = [max(int(round(p.cold_start_mean_s / dt)), 0) for p in pools]
+    # lognormal jitter: sigma^2 = ln(1 + jitter^2) keeps the sampled mean at
+    # exactly cold_start_mean_s; pend/scan slack covers the ~99.9th-percentile
+    # delay (longer draws are clipped there)
+    cs_sigma = [np.sqrt(np.log1p(p.cold_start_jitter ** 2)) for p in pools]
+    cs_mu = [np.log(max(p.cold_start_mean_s, _EPS)) - sg * sg / 2
+             for p, sg in zip(pools, cs_sigma)]
+    scan_bins = [cb if p.cold_start_jitter == 0 or p.cold_start_mean_s == 0
+                 else max(int(np.ceil(np.exp(m + 3.1 * sg) / dt)), cb, 1)
+                 for p, cb, m, sg in zip(pools, cold_bins, cs_mu, cs_sigma)]
+    jittered = [p.cold_start_jitter > 0 and p.cold_start_mean_s > 0
+                for p in pools]
+    max_cb = max(scan_bins)
+    seed_ids = (np.arange(S) if seed_indices is None
+                else np.asarray(seed_indices, int))
+    if len(seed_ids) != S:
+        raise ValueError(f"seed_indices names {len(seed_ids)} rows for "
+                         f"a {S}-seed workload")
+    cs_delay = None
+    if any(jittered):
+        # pre-draw every (seed row, bin, jittered pool) spin-up delay, one
+        # substream per (cold_start_seed, absolute seed, pool): the draws a
+        # row sees depend only on its absolute identity, never on which
+        # slice of the workload it is simulated in or on the policy — the
+        # paired-replicate property candidate tuning relies on
+        cs_delay = np.zeros((S, T, P))
+        for p in range(P):
+            if not jittered[p]:
+                continue
+            for i, g in enumerate(seed_ids):
+                row_rng = np.random.default_rng((cold_start_seed, int(g), p))
+                cs_delay[i, :, p] = row_rng.lognormal(cs_mu[p], cs_sigma[p],
+                                                      size=T)
     svc_terms = [(p.service.t_fixed, p.service.t_per_unit,
                   float(p.service.max_batch)) for p in pools]
 
@@ -333,7 +408,7 @@ def simulate_fleet(workload, fleet: FleetConfig, policy, *,
             if excess.any():
                 # scale down: cancel pending cold-starts newest-first (they
                 # stop billing now), then shrink ready replicas
-                for j in range(min(t + 1 + cold_bins[p], T + max_cb + 1),
+                for j in range(min(t + 1 + scan_bins[p], T + max_cb + 1),
                                t, -1):
                     col = pend[:, j, p]
                     if not col.any():
@@ -346,7 +421,13 @@ def simulate_fleet(workload, fleet: FleetConfig, policy, *,
                         break
                 ready[:, p] = np.maximum(ready[:, p] - excess, 0.0)
             grow = np.maximum(tg - ready[:, p] - in_flight[:, p], 0.0)
-            pend[:, min(t + 1 + cold_bins[p], T + max_cb + 1), p] += grow
+            if jittered[p]:
+                jb = np.clip(np.rint(cs_delay[:, t, p] / dt).astype(int), 0,
+                             scan_bins[p])
+                idx = np.minimum(t + 1 + jb, T + max_cb + 1)
+                pend[np.arange(S), idx, p] += grow
+            else:
+                pend[:, min(t + 1 + cold_bins[p], T + max_cb + 1), p] += grow
             in_flight[:, p] += grow
             # the bill: replicas that served this bin (even if torn down at
             # its end) plus everything cold-starting after this bin's
@@ -401,17 +482,21 @@ def simulate_fleet(workload, fleet: FleetConfig, policy, *,
 
 
 def simulate(workload, service: ServiceModel, policy, *,
-             slo_s: float = None, cold_start_s: float = 30.0,
+             slo_s: float = None, cold_start_s=30.0,
              max_queue: float = None, initial_replicas: int = None,
              min_replicas: int = 0, max_replicas: int = 1024,
-             discipline="fifo") -> SimResult:
+             discipline="fifo", cold_start_seed: int = 0,
+             seed_indices=None) -> SimResult:
     """Homogeneous fleet: run ``policy`` against a ``Trace`` or ``Workload``
     on replicas of ``service``. A thin wrapper over ``simulate_fleet`` with
-    one pool."""
+    one pool. ``cold_start_s`` accepts the same constant-or-(mean, jitter)
+    spec as ``PoolConfig``."""
     # The policy may carry its own shape choice (predictive: recommend()).
     service = getattr(policy, "service", None) or service
     pool = PoolConfig(service=service, cold_start_s=cold_start_s,
                       min_replicas=min_replicas, max_replicas=max_replicas,
                       initial_replicas=initial_replicas)
     return simulate_fleet(workload, FleetConfig((pool,), max_queue=max_queue),
-                          policy, slo_s=slo_s, discipline=discipline)
+                          policy, slo_s=slo_s, discipline=discipline,
+                          cold_start_seed=cold_start_seed,
+                          seed_indices=seed_indices)

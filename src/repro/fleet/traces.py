@@ -97,6 +97,80 @@ def replay_trace(rates_per_s, dt_s: float = 1.0, n_seeds: int = 8, seed: int = 0
     return _sample(name, np.asarray(rates_per_s, float), dt_s, n_seeds, seed)
 
 
+def load_trace_csv(path, rate_col=1, dt_s: float = 60.0, *, mean_rate_per_s:
+                   float = None, n_seeds: int = 8, seed: int = 0,
+                   name: str = None, delimiter: str = ",") -> Trace:
+    """Load a recorded rate profile from a CSV file into a ``replay_trace``.
+
+    ``rate_col`` is a 0-based column index or a header name; a leading header
+    row and ``#`` comment lines are tolerated (a header is required when
+    ``rate_col`` is a name; with an index, the first row counts as the
+    header only when *none* of its cells parse as numbers — a data row with
+    a corrupt cell cannot masquerade as a header and is rejected instead).
+    ``dt_s`` is the recording's bin width.
+    Rows whose rate cell is missing, unparseable, or non-finite raise a
+    ``ValueError`` naming the offending line — a silently skipped gap would
+    shift every later bin in time. ``mean_rate_per_s`` (optional) rescales
+    the profile so its mean matches a target rate — replaying a public
+    trace's *shape* against a fleet sized in this repo's request units.
+    """
+    import os
+
+    rates, header, col = [], None, None
+    with open(path) as f:
+        for lineno, line in enumerate(f, start=1):
+            row = line.strip()
+            if not row or row.startswith("#"):
+                continue
+            cells = [c.strip() for c in row.split(delimiter)]
+            if header is None:
+                # resolve the rate column on the first non-comment row; with
+                # an index column that row is a header only when NO cell is
+                # numeric, so a data row with a corrupt label still raises
+                # below instead of being swallowed as a "header"
+                if isinstance(rate_col, str):
+                    if rate_col not in cells:
+                        raise ValueError(f"{path}: no column {rate_col!r} in "
+                                         f"header {cells}")
+                    header, col = cells, cells.index(rate_col)
+                    continue
+                col = int(rate_col)
+
+                def _numeric(c):
+                    try:
+                        float(c)
+                        return True
+                    except ValueError:
+                        return False
+                if cells and not any(_numeric(c) for c in cells):
+                    header = cells          # label-only row: a real header
+                    continue
+                header = []   # any numeric cell = data row; bad rate cells
+                #               fall through to the named-line errors below
+            if col >= len(cells):
+                raise ValueError(f"{path}:{lineno}: row has {len(cells)} "
+                                 f"column(s), rate column is {col}")
+            try:
+                r = float(cells[col])
+            except ValueError:
+                raise ValueError(f"{path}:{lineno}: rate cell "
+                                 f"{cells[col]!r} is not a number") from None
+            if not np.isfinite(r):
+                raise ValueError(f"{path}:{lineno}: non-finite rate {r!r}")
+            rates.append(r)
+    if not rates:
+        raise ValueError(f"{path}: no data rows")
+    rates = np.clip(np.asarray(rates, float), 0.0, None)
+    if mean_rate_per_s is not None:
+        mean = rates.mean()
+        if mean <= 0:
+            raise ValueError(f"{path}: all-zero trace cannot be rescaled "
+                             f"to mean {mean_rate_per_s}")
+        rates = rates * (mean_rate_per_s / mean)
+    stem = os.path.splitext(os.path.basename(str(path)))[0]
+    return replay_trace(rates, dt_s, n_seeds, seed, name=name or stem)
+
+
 def standard_traces(mean_rate_per_s: float, duration_s: float, dt_s: float = 1.0,
                     n_seeds: int = 8, seed: int = 0) -> list:
     """The canonical evaluation set: steady, diurnal, flash crowd, ramp."""

@@ -1,0 +1,23 @@
+# Autonomous controller scoping: the paper's nested-loop Monte Carlo
+# methodology applied to the fleet controller itself. The fleet simulator is
+# the inner loop (vectorized over workload draws); `tune()` wraps the outer
+# search over autoscaler/fleet parameters — declarative ParamSpaces
+# (`space`), paired candidate evaluation (`evaluate`), successive-halving +
+# SPRT racing (`racing`), and the response-surface/Pareto report (`result`).
+from repro.fleet.tuning.evaluate import (CandidateEval, Objective,
+                                         TuningScenario, evaluate_candidates,
+                                         per_seed_metrics)
+from repro.fleet.tuning.racing import RaceResult, exhaustive, race
+from repro.fleet.tuning.result import (TuningReport, frontier_table,
+                                       pareto_frontier)
+from repro.fleet.tuning.space import (Categorical, Continuous, Dim, Integer,
+                                      ParamSpace, discipline_dim, quota_dims)
+from repro.fleet.tuning.tuner import TuningBudget, tune, tuning_scenario
+
+__all__ = [
+    "CandidateEval", "Objective", "TuningScenario", "evaluate_candidates",
+    "per_seed_metrics", "RaceResult", "exhaustive", "race", "TuningReport",
+    "frontier_table", "pareto_frontier", "Categorical", "Continuous", "Dim",
+    "Integer", "ParamSpace", "discipline_dim", "quota_dims", "TuningBudget",
+    "tune", "tuning_scenario",
+]

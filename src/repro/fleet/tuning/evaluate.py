@@ -1,0 +1,238 @@
+"""Vectorized candidate evaluation: configs x seeded trace replicates.
+
+The scenario pre-samples ONE Monte Carlo workload tensor (n_seeds trace
+replicates) and every candidate config is simulated against slices of that
+same tensor. Candidates are therefore *paired* on identical arrival draws:
+the difference between two candidates' per-seed scores is free of the
+arrival-sampling variance a naive sweep (fresh traces per candidate) pays —
+the classic common-random-numbers variance reduction, and what lets the
+racing loop compare candidates on very few replicates.
+
+Per candidate the evaluator returns per-seed dollar cost, worst-class SLO
+attainment and drop rate (the simulator is already seed-vectorized, so one
+``simulate_fleet`` call covers a whole seed slice), the pooled per-request
+p99, and across-seed confidence intervals.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.cost_model import dollar_cost
+from repro.fleet.report import weighted_percentile
+from repro.fleet.simulator import FleetConfig, SimResult, simulate_fleet
+from repro.fleet.traces import Trace
+from repro.fleet.workload import Workload
+
+_Z95 = 1.959963984540054
+
+
+@dataclass(frozen=True)
+class Objective:
+    """Scalarization of (cost, SLO attainment): dollars per hour plus a steep
+    penalty per unit of worst-class attainment shortfall below the bar. The
+    penalty converts "meet the SLO" into a soft constraint the tuner can
+    race on — a config missing the bar by 1% pays ``penalty_usd_per_hour/100``
+    extra $/hr, dwarfing any honest capacity saving."""
+    min_attainment: float = 0.99
+    penalty_usd_per_hour: float = 2000.0
+
+    def score(self, cost_usd_hr, attainment):
+        """Per-seed scalar score (lower is better); inputs broadcast."""
+        shortfall = np.maximum(self.min_attainment - np.asarray(attainment),
+                               0.0)
+        return np.asarray(cost_usd_hr) + self.penalty_usd_per_hour * shortfall
+
+
+@dataclass
+class CandidateEval:
+    """One candidate's evidence so far (arrays grow as racing adds seeds)."""
+    params: dict
+    cost_usd_hr: np.ndarray          # (n_seeds_seen,)
+    attainment: np.ndarray           # (n_seeds_seen,) worst-class
+    drop_rate: np.ndarray            # (n_seeds_seen,)
+    score: np.ndarray                # (n_seeds_seen,) objective scalarization
+    sojourns: list = field(repr=False, default_factory=list)  # (vals, wts)
+    n_rounds: int = 0                # racing rounds survived
+
+    @property
+    def n_seeds(self) -> int:
+        return len(self.score)
+
+    def mean_cost(self) -> float:
+        return float(self.cost_usd_hr.mean())
+
+    def mean_attainment(self) -> float:
+        return float(self.attainment.mean())
+
+    def mean_drop_rate(self) -> float:
+        return float(self.drop_rate.mean())
+
+    def mean_score(self) -> float:
+        return float(self.score.mean())
+
+    def ci(self, arr: np.ndarray) -> float:
+        """95% half-width of the mean (0 with a single replicate)."""
+        if len(arr) < 2:
+            return 0.0
+        return float(_Z95 * arr.std(ddof=1) / np.sqrt(len(arr)))
+
+    def cost_ci(self) -> float:
+        return self.ci(self.cost_usd_hr)
+
+    def attainment_ci(self) -> float:
+        return self.ci(self.attainment)
+
+    def score_ci(self) -> float:
+        return self.ci(self.score)
+
+    def p99_s(self) -> float:
+        """Pooled exact per-request p99 over every seed seen."""
+        if not self.sojourns:
+            return float("nan")
+        vals = np.concatenate([v for v, _ in self.sojourns])
+        wts = np.concatenate([w for _, w in self.sojourns])
+        return weighted_percentile(vals, wts, 99)
+
+    def extend(self, other: "CandidateEval") -> None:
+        """Append another seed slice's evidence (paired racing rounds)."""
+        self.cost_usd_hr = np.concatenate([self.cost_usd_hr,
+                                           other.cost_usd_hr])
+        self.attainment = np.concatenate([self.attainment, other.attainment])
+        self.drop_rate = np.concatenate([self.drop_rate, other.drop_rate])
+        self.score = np.concatenate([self.score, other.score])
+        self.sojourns.extend(other.sojourns)
+
+
+def _slice_trace(tr: Trace, s0: int, s1: int) -> Trace:
+    return Trace(tr.name, tr.dt_s, tr.rate, tr.arrivals[s0:s1])
+
+
+def _slice_workload(wl: Workload, s0: int, s1: int) -> Workload:
+    return Workload(wl.name, wl.classes,
+                    tuple(_slice_trace(tr, s0, s1) for tr in wl.traces))
+
+
+@dataclass
+class TuningScenario:
+    """Everything ``tune()`` needs to score a candidate config:
+
+    * ``workload``  — the shared Monte Carlo trace tensor (a ``Workload``, or
+      a bare ``Trace`` + ``slo_s``); its seed axis is the replicate budget.
+    * ``fleet``     — the fleet template (``quota:<pool>`` dims override each
+      pool's ``max_replicas`` per candidate).
+    * ``policy_cls`` + ``context`` — the policy family under tuning;
+      candidates are built with ``policy_cls.from_params(params, **context)``.
+    * ``discipline``/``max_queue``/``cold_start_seed`` — simulation fixtures
+      (a ``discipline`` dim in the space overrides the fixture).
+    """
+    name: str
+    workload: Workload
+    fleet: FleetConfig
+    policy_cls: type
+    context: dict = field(default_factory=dict)
+    discipline: str = "fifo"
+    max_queue: Optional[float] = None
+    cold_start_seed: int = 0
+    build_policy: Callable = None    # override: params -> Policy
+
+    def __post_init__(self):
+        if isinstance(self.workload, Trace):
+            slo = self.context.get("slo_s")
+            if slo is None:
+                raise ValueError("a bare Trace workload needs context"
+                                 "['slo_s'] for its request class")
+            self.workload = Workload.from_trace(self.workload, float(slo))
+
+    @property
+    def n_seeds(self) -> int:
+        return self.workload.n_seeds
+
+    def split_params(self, params: dict):
+        """(policy_params, discipline, fleet) for one candidate — the
+        cross-cutting ``discipline``/``quota:*`` dims are simulation-level,
+        everything else belongs to the policy constructor."""
+        policy_params = {k: v for k, v in params.items()
+                         if k != "discipline" and not k.startswith("quota:")}
+        discipline = params.get("discipline", self.discipline)
+        fleet = self.fleet
+        quotas = {k[len("quota:"):]: int(v) for k, v in params.items()
+                  if k.startswith("quota:")}
+        if quotas:
+            pools = tuple(
+                replace(p, max_replicas=quotas[p.label],
+                        min_replicas=min(p.min_replicas, quotas[p.label]))
+                if p.label in quotas else p for p in fleet.pools)
+            fleet = FleetConfig(pools, max_queue=fleet.max_queue)
+        return policy_params, discipline, fleet
+
+    def make_policy(self, params: dict):
+        policy_params, _, fleet = self.split_params(params)
+        if self.build_policy is not None:
+            return self.build_policy(policy_params)
+        ctx = dict(self.context)
+        ctx.pop("slo_s", None)
+        if "fleet" in ctx or getattr(self.policy_cls, "per_pool", False):
+            ctx["fleet"] = fleet
+        return self.policy_cls.from_params(policy_params, **ctx)
+
+    def simulate(self, params: dict, s0: int, s1: int) -> SimResult:
+        """Run one candidate against the shared seed slice [s0, s1).
+        ``seed_indices`` pins each row's cold-start jitter substream to its
+        absolute replicate id, so racing's incremental slices see exactly
+        the draws a single full-budget evaluation would."""
+        _, discipline, fleet = self.split_params(params)
+        return simulate_fleet(
+            _slice_workload(self.workload, s0, s1), fleet,
+            self.make_policy(params), discipline=discipline,
+            max_queue=self.max_queue, cold_start_seed=self.cold_start_seed,
+            seed_indices=np.arange(s0, s1))
+
+
+def per_seed_metrics(sim: SimResult):
+    """(cost $/hr, worst-class attainment, drop rate), each (n_seeds,), from
+    one seed-vectorized simulation — the per-seed analogues of
+    ``report.summarize``'s scalars (same conventions: drops count against
+    attainment, the unresolved terminal backlog counts for neither side)."""
+    S = sim.arrivals.shape[0]
+    usd = np.zeros(S)
+    for p, pc in enumerate(sim.fleet.pools):
+        bins = sim.pool_billed[:, :, p].sum(axis=1)
+        usd += dollar_cost(sim.dt_s, bins, pc.service.shape.chips,
+                           pc.service.shape.hw)
+    cost_hr = usd / max(sim.trace.duration_s / 3600.0, 1e-12)
+
+    arrived_c = (sim.class_admitted + sim.class_dropped).sum(axis=1)
+    completed_c = arrived_c - sim.class_queue[:, -1, :]
+    ok_c = sim.class_ok.sum(axis=1)
+    att_c = np.divide(ok_c, completed_c, out=np.ones_like(ok_c),
+                      where=completed_c > 0)
+    worst_att = att_c.min(axis=1)
+
+    arrived = sim.arrivals.sum(axis=1)
+    drop = sim.dropped.sum(axis=1) / np.maximum(arrived, 1.0)
+    return cost_hr, worst_att, drop
+
+
+def evaluate_candidates(scenario: TuningScenario, candidates: list,
+                        objective: Objective, s0: int = 0,
+                        s1: int = None) -> list:
+    """Score every candidate on the shared seed slice [s0, s1). One
+    ``simulate_fleet`` call per candidate covers the whole slice (the
+    simulator is seed-vectorized); identical slices across candidates give
+    the paired comparison racing relies on."""
+    s1 = scenario.n_seeds if s1 is None else s1
+    if not 0 <= s0 < s1 <= scenario.n_seeds:
+        raise ValueError(f"bad seed slice [{s0}, {s1}) for "
+                         f"{scenario.n_seeds} replicates")
+    out = []
+    for params in candidates:
+        sim = scenario.simulate(params, s0, s1)
+        cost_hr, att, drop = per_seed_metrics(sim)
+        out.append(CandidateEval(
+            params=dict(params), cost_usd_hr=cost_hr, attainment=att,
+            drop_rate=drop, score=np.asarray(objective.score(cost_hr, att)),
+            sojourns=[(sim.sojourn_values, sim.sojourn_weights)]))
+    return out

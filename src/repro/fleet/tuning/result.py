@@ -1,0 +1,147 @@
+"""Tuning outputs: the Pareto frontier and the ``TuningReport``.
+
+The report is the controller-scoping analogue of the paper's per-use-case
+deliverable: the recommended (winner) configuration, the cost-vs-attainment
+frontier a deployer can trade along, the fitted response surface over the
+controller knobs (Figs. 4-8 methodology with autoscaler parameters as the
+design variables, rendered as the same ASCII contour), and the simulation
+budget the racing loop actually spent getting there.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.core.report import fmt_time, markdown_table
+from repro.core.surfaces import ResponseSurface, render_ascii_surface
+
+_ATT_EPS = 1e-9
+
+
+def pareto_frontier(evals: list) -> tuple:
+    """Non-dominated (mean cost, mean worst-class attainment) subset of
+    ``evals``, sorted cheapest-first with strictly increasing attainment —
+    every member is the cheapest way to buy at least its attainment."""
+    pts = sorted(evals, key=lambda e: (e.mean_cost(), -e.mean_attainment()))
+    out, best_att = [], -np.inf
+    for e in pts:
+        if e.mean_attainment() > best_att + _ATT_EPS:
+            out.append(e)
+            best_att = e.mean_attainment()
+    return tuple(out)
+
+
+def _fmt_param(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def frontier_table(frontier) -> str:
+    rows = [[", ".join(f"{k}={_fmt_param(v)}"
+                       for k, v in sorted(e.params.items())),
+             f"${e.mean_cost():.2f}/hr ± {e.cost_ci():.2f}",
+             f"{e.mean_attainment() * 100:.2f}% ± "
+             f"{e.attainment_ci() * 100:.2f}",
+             fmt_time(e.p99_s()),
+             f"{e.mean_drop_rate() * 100:.2f}%",
+             str(e.n_seeds)]
+            for e in frontier]
+    return markdown_table(
+        ["config", "cost", "worst-class SLO", "p99", "drop", "seeds"], rows)
+
+
+@dataclass
+class TuningReport:
+    """What ``tune()`` hands back: the winner and how much to trust it."""
+    scenario_name: str
+    policy_family: str
+    objective: object                # evaluate.Objective
+    winner: object                   # CandidateEval at full replicate budget
+    frontier: tuple                  # Pareto CandidateEvals, cheapest first
+    surface: Optional[ResponseSurface]
+    surface_names: tuple = ()
+    sims_used: int = 0
+    full_budget: int = 0
+    baseline: object = None          # CandidateEval of the hand-set config
+    evals: list = field(default_factory=list, repr=False)
+    space: object = None
+    _scenario: object = field(default=None, repr=False)
+
+    @property
+    def budget_frac(self) -> float:
+        return self.sims_used / max(self.full_budget, 1)
+
+    @property
+    def surface_r2(self) -> float:
+        return float(self.surface.r2) if self.surface is not None else float("nan")
+
+    def build_policy(self):
+        """Instantiate the tuned policy (ready for ``simulate_fleet``)."""
+        return self._scenario.make_policy(self.winner.params)
+
+    def dominates_baseline(self) -> bool:
+        """Tuned >= baseline attainment AND <= baseline cost, at least one
+        strict (on the paired replicate means). False without a baseline."""
+        if self.baseline is None:
+            return False
+        att_t, att_b = self.winner.mean_attainment(), \
+            self.baseline.mean_attainment()
+        c_t, c_b = self.winner.mean_cost(), self.baseline.mean_cost()
+        return (att_t >= att_b - _ATT_EPS and c_t <= c_b + 1e-9
+                and (att_t > att_b + _ATT_EPS or c_t < c_b - 1e-9))
+
+    def ascii_surface(self, n_x: int = 16, n_y: int = 10) -> str:
+        """ASCII contour of the fitted objective surface over the two leading
+        numeric dims (others pinned at the winner), via the same renderer the
+        scoping reports use. Empty string when no surface was fitted."""
+        if self.surface is None or len(self.surface_names) < 2 \
+                or self.space is None:
+            return ""
+        dims = {d.name: d for d in self.space.dims}
+        dx, dy = (dims[n] for n in self.surface_names[:2])
+        xs = np.array(dx.grid(n_x), float)
+        ys = np.array(dy.grid(n_y), float)
+        base = {n: float(self.winner.params[n]) for n in self.surface_names}
+        Z = np.empty((len(ys), len(xs)))
+        for i, y in enumerate(ys):
+            for j, x in enumerate(xs):
+                Z[i, j] = self.surface.predict(
+                    dict(base, **{dx.name: float(x), dy.name: float(y)}))
+        return render_ascii_surface(
+            xs, ys, Z, dx.name, dy.name,
+            title=f"objective surface (r2={self.surface.r2:.3f}), "
+                  f"other dims at winner")
+
+    def summary(self) -> str:
+        lines = [f"# tuned {self.policy_family} on {self.scenario_name}",
+                 "",
+                 "winner: " + ", ".join(
+                     f"{k}={_fmt_param(v)}"
+                     for k, v in sorted(self.winner.params.items())),
+                 f"  ${self.winner.mean_cost():.2f}/hr, worst-class SLO "
+                 f"{self.winner.mean_attainment() * 100:.2f}%, p99 "
+                 f"{fmt_time(self.winner.p99_s())} "
+                 f"({self.winner.n_seeds} replicates)"]
+        if self.baseline is not None:
+            verdict = ("dominates" if self.dominates_baseline()
+                       else "does not dominate")
+            lines += [f"default: ${self.baseline.mean_cost():.2f}/hr, "
+                      f"worst-class SLO "
+                      f"{self.baseline.mean_attainment() * 100:.2f}% "
+                      f"— tuned {verdict} the hand-set default"]
+        lines += ["", f"simulation budget: {self.sims_used} of "
+                  f"{self.full_budget} candidate-replicates "
+                  f"({self.budget_frac * 100:.0f}% of the naive sweep)"]
+        if self.surface is not None:
+            lines += [f"response surface over "
+                      f"({', '.join(self.surface_names)}): "
+                      f"r2 = {self.surface.r2:.3f}"]
+        lines += ["", "cost-vs-attainment Pareto frontier:",
+                  frontier_table(self.frontier)]
+        art = self.ascii_surface()
+        if art:
+            lines += ["", art]
+        return "\n".join(lines)

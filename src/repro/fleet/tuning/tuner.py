@@ -1,0 +1,153 @@
+"""``tune()`` — the outer autonomous loop over controller/fleet parameters.
+
+The fleet simulator is already the paper's inner Monte Carlo loop (one
+vectorized pass per config over every workload draw); ``tune`` wraps the
+outer loop the paper runs over container configurations, with the
+*controller's own knobs* as the design parameters:
+
+    sample (LHS or grid from a seeded rng)
+      -> race (paired successive halving + SPRT culling, ``racing.py``)
+        -> refine (response surface over the surviving region, Pareto
+           frontier, winner at full replicate budget)
+
+The result is a ``TuningReport``: the framework now scopes itself — the same
+sweep/race/fit methodology that picks a cloud shape picks ``horizon_s``,
+``headroom``, cooldowns, quota mixes, or the scheduling discipline.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.recommender import recommend
+from repro.core.surfaces import _n_cols, fit_response_surface
+from repro.fleet.simulator import FleetConfig
+from repro.fleet.tuning.evaluate import (Objective, TuningScenario,
+                                         evaluate_candidates)
+from repro.fleet.tuning.racing import exhaustive, race
+from repro.fleet.tuning.result import TuningReport, pareto_frontier
+
+
+@dataclass(frozen=True)
+class TuningBudget:
+    """How much simulation to spend and how to allocate it. The replicate
+    budget itself is the scenario workload's seed axis; ``n_candidates``
+    only applies to the LHS sampler (the grid's size is its levels)."""
+    n_candidates: int = 24
+    sampler: str = "lhs"            # "lhs" | "grid"
+    grid_levels: int = 3
+    init_seeds: int = 2
+    eta: int = 2
+    racing: bool = True
+    alpha: float = 0.05
+    beta: float = 0.05
+
+
+def tuning_scenario(scenario, workload, policy_cls, *, shape_name: str = None,
+                    fleet: FleetConfig = None, cold_start_s=60.0,
+                    max_queue: float = None, discipline: str = "fifo",
+                    cold_start_seed: int = 0, name: str = None
+                    ) -> TuningScenario:
+    """Build a ``TuningScenario`` from a fleet ``Scenario`` (scoping rows).
+
+    Single-pool by default: the pool's shape is ``shape_name`` or the
+    scoping stack's own pick (``recommend()`` under the scenario constraint),
+    and the policy context's rows are restricted to that shape so predictive
+    candidates size against the pool they actually run on. Pass ``fleet``
+    for heterogeneous tuning (e.g. ``HeterogeneousPredictivePolicy`` with
+    ``quota:*`` dims).
+    """
+    if fleet is None:
+        if shape_name is None:
+            rec = recommend(scenario.rows_at(), scenario.constraint())
+            if rec.shape is None:
+                raise ValueError("tuning_scenario: no feasible shape "
+                                 f"({rec.reason})")
+            shape_name = rec.shape.name
+        fleet = FleetConfig((scenario.pool_for(shape_name,
+                                               cold_start_s=cold_start_s),))
+    pool_shapes = {p.service.shape.name for p in fleet.pools}
+    rows = [r for r in scenario.rows if r.shape_name in pool_shapes]
+    context = {"rows": rows, "constraint": scenario.constraint(),
+               "units_per_step": scenario.units_per_step,
+               "slo_s": scenario.slo_s}
+    return TuningScenario(
+        name=name or f"{scenario.name}/{getattr(workload, 'name', 'trace')}",
+        workload=workload, fleet=fleet, policy_cls=policy_cls,
+        context=context, discipline=discipline, max_queue=max_queue,
+        cold_start_seed=cold_start_seed)
+
+
+def _fit_surface(space, evals, min_rounds: int = 2):
+    """Response surface over the surviving region: log-log polynomial of the
+    mean objective score against the numeric dims, fitted on the candidates
+    that survived at least one cull (the racer spent real replicates there,
+    so their means are trustworthy); falls back to every evaluated candidate
+    when the surviving set alone is too small.
+
+    The fit's r2 is a trust signal (the bench gate reads it), so a pool must
+    leave residual degrees of freedom: with exactly as many points as design
+    columns lstsq interpolates anything with r2 == 1. Require 2 spare points
+    beyond the quadratic's columns before fitting on a pool.
+    """
+    names = [n for n in space.numeric_names()]
+    if not names:
+        return None, ()
+    n_needed = _n_cols(len(names), 2) + 2
+    for pool in ([e for e in evals if e.n_rounds >= min_rounds], evals):
+        if len(pool) < n_needed:
+            continue
+        X = np.array([[float(e.params[n]) for n in names] for e in pool])
+        y = np.array([e.mean_score() for e in pool])
+        try:
+            return fit_response_surface(names, X, y, degree=2), tuple(names)
+        except ValueError:
+            continue
+    return None, ()
+
+
+def tune(scenario: TuningScenario, space, objective: Objective = None,
+         budget: TuningBudget = None, *, seed: int = 0,
+         baseline: dict = None) -> TuningReport:
+    """Autonomously scope the controller: search ``space`` for the config of
+    ``scenario.policy_cls`` minimizing ``objective`` over the scenario's
+    Monte Carlo workload. Fully deterministic under (``seed``, budget,
+    scenario): same inputs, same winner.
+
+    ``baseline`` (optional) is a hand-set config evaluated at full replicate
+    budget on the same paired draws — the tuned-vs-default comparison
+    ``TuningReport.dominates_baseline()`` reads.
+    """
+    objective = objective or Objective()
+    budget = budget or TuningBudget()
+    if budget.sampler == "grid":
+        candidates = space.grid(budget.grid_levels)
+    elif budget.sampler == "lhs":
+        candidates = space.sample_lhs(budget.n_candidates, seed=seed)
+    else:
+        raise ValueError(f"unknown sampler {budget.sampler!r}")
+
+    if budget.racing:
+        rr = race(scenario, candidates, objective,
+                  init_seeds=budget.init_seeds, eta=budget.eta,
+                  alpha=budget.alpha, beta=budget.beta)
+    else:
+        rr = exhaustive(scenario, candidates, objective)
+
+    surface, names = _fit_surface(space, rr.evals)
+    base_eval = None
+    if baseline is not None:
+        base_eval = evaluate_candidates(scenario, [baseline], objective)[0]
+
+    return TuningReport(
+        scenario_name=scenario.name,
+        policy_family=getattr(scenario.policy_cls, "name",
+                              scenario.policy_cls.__name__),
+        objective=objective,
+        winner=rr.winner,
+        frontier=pareto_frontier(rr.evals),
+        surface=surface, surface_names=names,
+        sims_used=rr.sims_used, full_budget=rr.full_budget,
+        baseline=base_eval, evals=rr.evals, space=space,
+        _scenario=scenario)

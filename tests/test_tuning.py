@@ -1,0 +1,447 @@
+"""Autonomous controller-scoping subsystem (`repro.fleet.tuning`): param
+spaces, paired evaluation, racing soundness, Pareto/report invariants, the
+response-surface underdetermined-fit fix, CSV trace ingestion, and stochastic
+cold starts."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import CellResult, RooflineTerms, get_shape
+from repro.core.surfaces import fit_response_surface
+from repro.fleet import (Categorical, Continuous, Integer, Objective,
+                         ParamSpace, PoolConfig, FleetConfig,
+                         PredictivePolicy, QueueProportionalPolicy,
+                         ReactivePolicy, StaticPolicy, TuningBudget,
+                         TuningScenario, discipline_dim, evaluate_candidates,
+                         exhaustive, flash_crowd_trace, load_trace_csv,
+                         mset_scenario, poisson_trace, quota_dims, race,
+                         replay_trace, service_model_from_cell, simulate,
+                         tune, tuning_scenario)
+
+DATA_CSV = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "data", "azure_functions_day.csv")
+
+
+def _cell(shape="v5e-4", t_comp=0.4, t_mem=0.1, t_coll=0.05, batch=64):
+    return CellResult(params={"batch": batch, "chips": get_shape(shape).chips},
+                      shape_name=shape,
+                      terms=RooflineTerms(t_comp, t_mem, t_coll),
+                      analysis={"peak_memory_per_device": 1e9})
+
+
+def _service(**kw):
+    return service_model_from_cell(_cell(**kw), units_per_step=kw.get("batch", 64))
+
+
+def _static_scenario(rate_mult=3.0, duration=600.0, n_seeds=8, seed=0,
+                     slo_s=2.0, cold_start_s=30.0):
+    """StaticPolicy tuning on a steady trace: cost is monotone in n, so the
+    cheapest n meeting the SLO is the known optimum."""
+    svc = _service()
+    tr = poisson_trace(rate_mult * svc.max_throughput, duration, dt_s=5.0,
+                       n_seeds=n_seeds, seed=seed)
+    fleet = FleetConfig((PoolConfig(service=svc, cold_start_s=cold_start_s,
+                                    initial_replicas=8),))
+    return TuningScenario(
+        name="static-steady", workload=tr, fleet=fleet,
+        policy_cls=StaticPolicy, context={"slo_s": slo_s})
+
+
+# ---------------------------- param spaces ----------------------------------
+
+def test_lhs_deterministic_in_bounds_and_stratified():
+    space = ParamSpace((Continuous("a", 1.0, 10.0, log=True),
+                        Integer("b", 2, 9),
+                        Categorical("c", ("x", "y"))))
+    s1 = space.sample_lhs(16, seed=3)
+    s2 = space.sample_lhs(16, seed=3)
+    assert s1 == s2
+    assert s1 != space.sample_lhs(16, seed=4)
+    for cfg in s1:
+        assert 1.0 <= cfg["a"] <= 10.0
+        assert 2 <= cfg["b"] <= 9 and isinstance(cfg["b"], int)
+        assert cfg["c"] in ("x", "y")
+    # latin-hypercube stratification: one sample per n-quantile bin per dim
+    a = sorted(np.log(c["a"]) for c in s1)
+    edges = np.linspace(np.log(1.0), np.log(10.0), 17)
+    assert all(edges[i] <= a[i] <= edges[i + 1] for i in range(16))
+
+
+def test_grid_is_full_factorial_and_spaces_compose():
+    space = ParamSpace((Continuous("a", 1.0, 4.0),)) \
+        + ParamSpace((Categorical("d", ("p", "q", "r")),))
+    g = space.grid(3)
+    assert len(g) == 9
+    assert {(c["a"], c["d"]) for c in g} == {
+        (a, d) for a in (1.0, 2.5, 4.0) for d in ("p", "q", "r")}
+    with pytest.raises(ValueError):
+        ParamSpace((Continuous("a", 0, 1), Integer("a", 1, 2)))
+    with pytest.raises(ValueError):
+        Continuous("bad", 5.0, 1.0)
+
+
+def test_policy_param_spaces_build_valid_policies():
+    rows = [_cell()]
+    ctx = {"rows": rows, "constraint": None, "units_per_step": 64}
+    from repro.core.recommender import Constraint
+    ctx["constraint"] = Constraint(max_step_latency_s=1.0)
+    for cls, kw in ((StaticPolicy, {}), (ReactivePolicy, {}),
+                    (QueueProportionalPolicy, {}), (PredictivePolicy, ctx)):
+        space = cls.param_space()
+        for params in space.sample_lhs(8, seed=1):
+            pol = cls.from_params(params, **kw)
+            assert isinstance(pol, cls)
+    # the reactive reparameterization keeps every sample constructor-legal
+    for params in ReactivePolicy.param_space().sample_lhs(64, seed=2):
+        pol = ReactivePolicy.from_params(params)
+        assert 0.0 <= pol.lower < pol.upper <= 1.0
+
+
+def test_cross_cutting_dims_route_to_simulation():
+    ts = _static_scenario()
+    space = (StaticPolicy.param_space() + ParamSpace((discipline_dim(),))
+             + quota_dims(ts.fleet, hi=8))
+    label = ts.fleet.pools[0].label
+    params = dict(space.sample_lhs(1, seed=0)[0])
+    params.update({"discipline": "edf", f"quota:{label}": 3,
+                   "n_replicas": 64})
+    policy_params, discipline, fleet = ts.split_params(params)
+    assert policy_params == {"n_replicas": 64}
+    assert discipline == "edf"
+    assert fleet.pools[0].max_replicas == 3
+    sim = ts.simulate(params, 0, 2)
+    assert sim.discipline == "edf"
+    assert sim.replicas.max() <= 3        # quota binds the 64-replica ask
+    # quota dims never exceed the pool's own cloud quota, tolerate lo=0
+    # (scale-to-zero search), and skip unsearchable pools
+    capped = FleetConfig((PoolConfig(service=ts.fleet.pools[0].service,
+                                     max_replicas=16),))
+    qd = quota_dims(capped, lo=0)
+    assert [d.hi for d in qd.dims] == [16]
+    assert all(v <= 16 for c in qd.sample_lhs(16, seed=0)
+               for v in c.values())
+    tiny = FleetConfig((PoolConfig(service=ts.fleet.pools[0].service,
+                                   max_replicas=1),))
+    assert len(quota_dims(tiny, lo=1)) == 0
+
+
+# ---------------------------- paired evaluation -----------------------------
+
+def test_paired_evaluation_matches_direct_simulation():
+    ts = _static_scenario(n_seeds=4)
+    obj = Objective(min_attainment=0.99)
+    ev = evaluate_candidates(ts, [{"n_replicas": 6}], obj)[0]
+    assert ev.n_seeds == 4
+    from repro.fleet import summarize
+    rep = summarize(simulate(ts.workload.traces[0], ts.fleet.pools[0].service,
+                             StaticPolicy(6), slo_s=2.0, cold_start_s=30.0,
+                             initial_replicas=8))
+    assert ev.mean_cost() == pytest.approx(rep.usd_per_hour)
+    assert ev.mean_attainment() == pytest.approx(rep.slo_attainment)
+    assert ev.p99_s() == pytest.approx(rep.p99_s)
+
+
+# ---------------------------- racing ----------------------------------------
+
+def test_known_optimum_never_culled_at_any_budget():
+    ts = _static_scenario(n_seeds=8)
+    obj = Objective(min_attainment=0.99)
+    grid = StaticPolicy.param_space().grid(8)
+    best = exhaustive(ts, grid, obj).winner.params
+    for init_seeds in (1, 2, 4, 8):
+        rr = race(ts, grid, obj, init_seeds=init_seeds)
+        assert rr.winner.params == best
+        assert best in [e.params for e in rr.survivors]
+
+
+def test_racing_beats_40pct_budget_with_exhaustive_winner():
+    ts = _static_scenario(n_seeds=16)
+    obj = Objective(min_attainment=0.99)
+    grid = [{"n_replicas": n} for n in range(1, 19)]
+    ex = exhaustive(ts, grid, obj)
+    rr = race(ts, grid, obj, init_seeds=2)
+    assert rr.winner.params == ex.winner.params
+    assert rr.sims_used <= 0.4 * ex.sims_used
+    assert rr.full_budget == ex.sims_used
+
+
+def test_sprt_culls_dominated_configs_early():
+    ts = _static_scenario(n_seeds=16)
+    obj = Objective(min_attainment=0.99)
+    rr = race(ts, [{"n_replicas": n} for n in (4, 16)], obj, init_seeds=2)
+    # 16 replicas cost 4x the feasible 4-replica config every seed: the SPRT
+    # should dismiss it long before the full 16-replicate budget
+    loser = next(e for e in rr.evals if e.params == {"n_replicas": 16})
+    assert loser.n_seeds < 16
+
+
+# ---------------------------- tune() ----------------------------------------
+
+def test_tune_seeded_determinism():
+    ts = _static_scenario(n_seeds=8)
+    space = StaticPolicy.param_space()
+    budget = TuningBudget(n_candidates=10)
+    reps = [tune(_static_scenario(n_seeds=8), space, Objective(), budget,
+                 seed=7) for _ in range(2)]
+    assert reps[0].winner.params == reps[1].winner.params
+    assert [e.params for e in reps[0].frontier] == \
+        [e.params for e in reps[1].frontier]
+    assert reps[0].sims_used == reps[1].sims_used
+    diff = tune(ts, space, Objective(), budget, seed=8)
+    assert diff.sims_used > 0   # different seed still runs; winner may agree
+
+
+def test_pareto_frontier_invariants():
+    ts = _static_scenario(n_seeds=6)
+    rep = tune(ts, StaticPolicy.param_space(), Objective(),
+               TuningBudget(n_candidates=12), seed=0)
+    costs = [e.mean_cost() for e in rep.frontier]
+    atts = [e.mean_attainment() for e in rep.frontier]
+    assert costs == sorted(costs)
+    assert all(a2 > a1 for a1, a2 in zip(atts, atts[1:]))
+    for e in rep.evals:        # no frontier member is dominated by anyone
+        for f in rep.frontier:
+            dominated = (e.mean_cost() <= f.mean_cost()
+                         and e.mean_attainment() > f.mean_attainment()
+                         and e.mean_cost() < f.mean_cost())
+            assert not dominated
+
+
+def test_tune_report_builds_runnable_policy():
+    scenario = mset_scenario(n_signals=256, n_memvec=512, fleet=1, slo_s=1.0)
+    svc = scenario.service_for(scenario.cheapest_shape())
+    tr = flash_crowd_trace(3.5 * svc.max_throughput, 1200.0, dt_s=5.0,
+                           peak_mult=4.0, burst_width_s=60.0, n_seeds=8,
+                           seed=2)
+    ts = tuning_scenario(scenario, tr, PredictivePolicy, cold_start_s=30.0)
+    rep = tune(ts, PredictivePolicy.param_space(),
+               Objective(min_attainment=1.0, penalty_usd_per_hour=1e5),
+               TuningBudget(n_candidates=16), seed=0,
+               baseline={"horizon_s": 60.0, "window_bins": 12,
+                         "headroom": 0.85})
+    # the winner is the best full-budget survivor by construction
+    assert rep.winner.n_seeds == ts.n_seeds
+    assert isinstance(rep.dominates_baseline(), bool)
+    assert rep.baseline.n_seeds == ts.n_seeds
+    pol = rep.build_policy()
+    assert isinstance(pol, PredictivePolicy)
+    sim = ts.simulate(rep.winner.params, 0, ts.n_seeds)
+    assert sim.policy_name == "predictive"
+    assert "Pareto" in rep.summary() or "frontier" in rep.summary()
+
+
+def test_paired_vs_independent_evaluation_property():
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=50),
+           n=st.integers(min_value=3, max_value=10))
+    def prop(seed, n):
+        obj = Objective(min_attainment=0.99)
+        a = _static_scenario(n_seeds=8, seed=seed)
+        b = _static_scenario(n_seeds=8, seed=seed + 1000)
+        cand = {"n_replicas": n}
+        ea = evaluate_candidates(a, [cand], obj)[0]
+        eb = evaluate_candidates(b, [cand], obj)[0]
+        # paired and independent-seed evaluation estimate the same expected
+        # cost: their means agree within the sum of CI widths (plus float
+        # slack for the zero-variance deterministic regime)
+        tol = 3 * (ea.cost_ci() + eb.cost_ci()) + 0.02 * ea.mean_cost()
+        assert abs(ea.mean_cost() - eb.mean_cost()) <= tol
+
+    prop()
+
+
+# ---------------------------- surfaces bugfix -------------------------------
+
+def test_underdetermined_quadratic_falls_back_to_linear():
+    # 4 points, 2 dims: quadratic needs 6 columns -> must degrade to linear
+    X = np.array([[1.0, 1.0], [2.0, 1.0], [1.0, 2.0], [2.0, 2.0]])
+    y = 3.0 * X[:, 0] * X[:, 1]
+    surf = fit_response_surface(["a", "b"], X, y, degree=2)
+    assert surf.degree == 1
+    assert 0.0 <= surf.r2 <= 1.0 + 1e-12
+    assert surf.predict({"a": 1.5, "b": 1.5}) > 0
+
+
+def test_underdetermined_linear_raises():
+    with pytest.raises(ValueError, match="degree-1"):
+        fit_response_surface(["a", "b"], [[1.0, 2.0], [2.0, 1.0]],
+                             [1.0, 2.0], degree=2)
+    # nonpositive rows are dropped BEFORE the count check: 3 raw points but
+    # only 1 usable -> even degree-1 (2 columns) is underdetermined
+    with pytest.raises(ValueError):
+        fit_response_surface(["a"], [[1.0], [-2.0], [-1.0]],
+                             [1.0, 2.0, 3.0], degree=1)
+
+
+def test_determined_fits_unchanged():
+    rng = np.random.default_rng(0)
+    X = rng.uniform(8, 512, size=(40, 2))
+    y = 1e-6 * X[:, 0] ** 2 * X[:, 1]
+    surf = fit_response_surface(["m", "n"], X, y, degree=2)
+    assert surf.degree == 2 and surf.r2 > 0.999
+
+
+# ---------------------------- CSV trace ingestion ---------------------------
+
+def test_load_trace_csv_header_comments_and_named_column(tmp_path):
+    p = tmp_path / "trace.csv"
+    p.write_text("# a comment\nminute,rps\n# another\n0,10\n5,20\n10,30\n")
+    tr = load_trace_csv(p, rate_col="rps", dt_s=300.0, n_seeds=3, seed=1)
+    assert tr.n_bins == 3 and tr.n_seeds == 3
+    assert np.allclose(tr.rate, [10.0, 20.0, 30.0])
+    assert tr.name == "trace"
+    # deterministic + equals replay_trace on the same rates
+    ref = replay_trace([10.0, 20.0, 30.0], 300.0, 3, 1, name="trace")
+    assert np.array_equal(tr.arrivals, ref.arrivals)
+
+
+def test_load_trace_csv_index_column_and_rescale(tmp_path):
+    p = tmp_path / "t.csv"
+    p.write_text("0,4\n1,8\n2,12\n")
+    tr = load_trace_csv(p, rate_col=1, dt_s=60.0, mean_rate_per_s=16.0,
+                        n_seeds=2)
+    assert tr.mean_rate == pytest.approx(16.0)
+    assert np.allclose(tr.rate, [8.0, 16.0, 24.0])
+
+
+def test_load_trace_csv_corrupt_first_row_is_not_a_header(tmp_path):
+    # a data row whose *other* column is corrupt must not be swallowed as a
+    # header (that would drop the bin and shift the whole trace in time)
+    p = tmp_path / "c.csv"
+    p.write_text("n/a,5.0\n1,6.0\n2,7.0\n")
+    tr = load_trace_csv(p, rate_col=1, dt_s=60.0, n_seeds=1)
+    assert np.allclose(tr.rate, [5.0, 6.0, 7.0])
+    # but a corrupt rate cell in the first row IS an error, not a header
+    q = tmp_path / "d.csv"
+    q.write_text("0,oops\n1,6.0\n")
+    with pytest.raises(ValueError, match="not a number"):
+        load_trace_csv(q, rate_col=1)
+
+
+def test_load_trace_csv_rejects_bad_rows(tmp_path):
+    bad_nan = tmp_path / "nan.csv"
+    bad_nan.write_text("t,r\n0,1.0\n5,nan\n")
+    with pytest.raises(ValueError, match="non-finite"):
+        load_trace_csv(bad_nan, rate_col="r")
+    bad_txt = tmp_path / "txt.csv"
+    bad_txt.write_text("0,1.0\n5,oops\n")
+    with pytest.raises(ValueError, match="not a number"):
+        load_trace_csv(bad_txt, rate_col=1)
+    short = tmp_path / "short.csv"
+    short.write_text("0,1.0\n5\n")
+    with pytest.raises(ValueError, match="column"):
+        load_trace_csv(short, rate_col=1)
+    with pytest.raises(ValueError, match="no column"):
+        load_trace_csv(bad_nan, rate_col="missing")
+
+
+def test_bundled_azure_day_trace_loads():
+    tr = load_trace_csv(DATA_CSV, rate_col="requests_per_s", dt_s=300.0,
+                        n_seeds=2)
+    assert tr.n_bins == 288                     # one day of 5-minute bins
+    assert tr.duration_s == pytest.approx(86400.0)
+    assert 0 < tr.mean_rate < tr.peak_rate
+
+
+# ---------------------------- stochastic cold starts ------------------------
+
+def test_zero_jitter_cold_start_byte_identical():
+    svc = _service()
+    tr = flash_crowd_trace(5 * svc.max_throughput, 900.0, dt_s=5.0,
+                           n_seeds=3, seed=0)
+    a = simulate(tr, svc, QueueProportionalPolicy(), slo_s=2.0,
+                 cold_start_s=60.0)
+    b = simulate(tr, svc, QueueProportionalPolicy(), slo_s=2.0,
+                 cold_start_s=(60.0, 0.0), cold_start_seed=123)
+    for k in ("served", "queue", "billed_replicas", "latency_s", "ok_served"):
+        assert np.array_equal(getattr(a, k), getattr(b, k))
+
+
+def test_jittered_cold_start_seeded_and_material():
+    svc = _service()
+    tr = flash_crowd_trace(5 * svc.max_throughput, 900.0, dt_s=5.0,
+                           n_seeds=3, seed=0)
+    kw = dict(slo_s=2.0, cold_start_s=(60.0, 0.8))
+    a = simulate(tr, svc, QueueProportionalPolicy(), cold_start_seed=1, **kw)
+    b = simulate(tr, svc, QueueProportionalPolicy(), cold_start_seed=1, **kw)
+    c = simulate(tr, svc, QueueProportionalPolicy(), cold_start_seed=2, **kw)
+    d = simulate(tr, svc, QueueProportionalPolicy(), slo_s=2.0,
+                 cold_start_s=60.0)
+    assert np.array_equal(a.billed_replicas, b.billed_replicas)
+    assert not np.array_equal(a.billed_replicas, c.billed_replicas)
+    assert not np.array_equal(a.billed_replicas, d.billed_replicas)
+    # conservation still holds under jittered spin-ups
+    total = a.served.sum(axis=1) + a.dropped.sum(axis=1) + a.queue[:, -1]
+    assert np.allclose(total, a.arrivals.sum(axis=1))
+
+
+def test_jittered_cold_start_slice_paired_with_full_run():
+    """A seed slice simulated with its absolute ``seed_indices`` must
+    reproduce exactly the rows of a full-workload simulation — the paired
+    property racing's incremental slices rely on under jitter."""
+    svc = _service()
+    tr = flash_crowd_trace(5 * svc.max_throughput, 900.0, dt_s=5.0,
+                           n_seeds=6, seed=0)
+    kw = dict(slo_s=2.0, cold_start_s=(60.0, 0.7), cold_start_seed=3)
+    full = simulate(tr, svc, QueueProportionalPolicy(), **kw)
+    from repro.fleet import Trace
+    part = simulate(Trace(tr.name, tr.dt_s, tr.rate, tr.arrivals[2:5]), svc,
+                    QueueProportionalPolicy(), seed_indices=np.arange(2, 5),
+                    **kw)
+    assert np.array_equal(full.billed_replicas[2:5], part.billed_replicas)
+    assert np.array_equal(full.served[2:5], part.served)
+
+
+def test_cold_start_spec_validation():
+    svc = _service()
+    with pytest.raises(ValueError):
+        PoolConfig(service=svc, cold_start_s=(30.0, -0.1))
+    with pytest.raises(ValueError):
+        PoolConfig(service=svc, cold_start_s=(-5.0, 0.2))
+    with pytest.raises(ValueError):        # 1-element typo of the pair spec
+        PoolConfig(service=svc, cold_start_s=(30.0,))
+    with pytest.raises(ValueError):
+        PoolConfig(service=svc, cold_start_s=(30.0, 0.2, 1.0))
+    assert PoolConfig(service=svc,
+                      cold_start_s=(30.0, 0.2)).cold_start_mean_s == 30.0
+
+
+def test_jittered_cold_start_mean_delay_tracks_mean():
+    """Launch one big scale-up and measure when capacity matures: the mean
+    maturation delay over many seeds must track cold_start_mean_s."""
+    svc = _service()
+    rates = np.concatenate([np.zeros(2), np.full(58, 3 * svc.max_throughput)])
+    tr = replay_trace(rates, dt_s=5.0, n_seeds=64, seed=4)
+    sim = simulate(tr, svc, StaticPolicy(6), slo_s=2.0,
+                   cold_start_s=(30.0, 0.5), initial_replicas=0,
+                   min_replicas=0, cold_start_seed=9)
+    # replicas requested at bin 0 mature ~30s later on average
+    t_ready = (sim.replicas[:, :] >= 3).argmax(axis=1) * 5.0
+    assert 15.0 <= t_ready.mean() <= 50.0
+
+
+# ---------------------------- benchmark headline ----------------------------
+
+def test_tuner_benchmark_headline_invariants():
+    """The acceptance headline, at the benchmark's own CI budget: tuned
+    dominates default, surface r2 >= 0.8, racing <= 40% of the sweep with
+    the exhaustive winner."""
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "benchmarks"))
+    import tune_controller
+    report, bench = tune_controller.run(full=False)
+    head = bench["headline"]
+    assert head["tuned_dominates_default"]
+    assert head["tuned"]["worst_class_attainment"] >= \
+        head["default"]["worst_class_attainment"] - 1e-9
+    assert head["tuned"]["usd_per_hour"] <= \
+        head["default"]["usd_per_hour"] + 1e-9
+    assert bench["surface_r2"] >= 0.8
+    assert bench["budget"]["frac"] <= 0.4
+    assert bench["race_vs_exhaustive"]["same_winner"]
+    assert bench["race_vs_exhaustive"]["race_frac"] <= 0.4

@@ -1,10 +1,12 @@
-"""Benchmark regression gate: compare a freshly produced ``BENCH_fleet.json``
-against the committed baseline and fail when SLO attainment drops or $/hr
-rises beyond tolerance.
+"""Benchmark regression gate: compare a freshly produced benchmark JSON
+(``BENCH_fleet.json`` or ``BENCH_tuner.json``) against the committed baseline
+and fail when SLO attainment drops, $/hr rises, or a headline invariant
+breaks. The benchmark kind is read off the file's ``"benchmark"`` field.
 
-The fleet benchmark is fully seeded, so fresh and baseline numbers are
-expected to match almost exactly; the tolerances only absorb float/platform
-drift. Gated invariants:
+The benchmarks are fully seeded, so fresh and baseline numbers are expected
+to match almost exactly; the tolerances only absorb float/platform drift.
+
+Fleet gate (``benchmark == "fleet_scaling"``):
 
 * every baseline record (policy, discipline, trace, shapes) still exists,
   its ``slo_attainment`` has not dropped more than ``--attain-tol`` (absolute)
@@ -14,10 +16,22 @@ drift. Gated invariants:
 * the headline invariant holds: EDF or strict priority meets the tiered SLOs
   at strictly lower cost than FIFO.
 
+Tuner gate (``benchmark == "controller_tuning"``):
+
+* the headline invariant holds: the tuned predictive policy dominates the
+  hand-set default (attainment >= at <= the cost, one strict) on the
+  flash-crowd scenario, and no worse than the baseline beyond tolerance;
+* the controller response surface keeps r2 >= 0.8 over the surviving region;
+* racing spends <= 40% of the naive sweep budget and returns the same winner
+  as the exhaustive grid sweep;
+* tuner wall clock stays within ``--wall-mult`` (2x) of the baseline.
+
 Usage (CI runs exactly this):
 
     python tools/check_bench.py BENCH_fleet.json \\
         --baseline benchmarks/baselines/fleet.json
+    python tools/check_bench.py BENCH_tuner.json \\
+        --baseline benchmarks/baselines/tuner.json
 
 After an intentional perf/cost change, refresh the baseline with
 ``--write-baseline`` and commit the result.
@@ -106,15 +120,84 @@ def compare(fresh: dict, base: dict, attain_tol: float,
     return problems
 
 
+MIN_SURFACE_R2 = 0.8            # trustworthy-fit bar (ISSUE 4 acceptance)
+MAX_BUDGET_FRAC = 0.4           # racing must beat 40% of the naive sweep
+
+
+WALL_FLOOR_S = 30.0             # grace floor: CI runners are slower than the
+#                                 dev machines baselines get recorded on; only
+#                                 flag wall clock when it exceeds BOTH 2x the
+#                                 baseline AND this absolute floor
+
+
+def compare_tuner(fresh: dict, base: dict, attain_tol: float,
+                  cost_tol: float, wall_mult: float) -> list:
+    """Regression strings for a controller-tuning benchmark (empty=green)."""
+    problems = []
+    head = fresh.get("headline", {})
+    tuned, default = head.get("tuned"), head.get("default")
+    if not tuned or not default:
+        return [f"tuner: headline missing (have {sorted(head)})"]
+    if not head.get("tuned_dominates_default"):
+        problems.append(
+            "tuner: tuned policy no longer dominates the hand-set default "
+            f"(tuned ${tuned['usd_per_hour']:.2f}/hr @ "
+            f"{tuned['worst_class_attainment']:.4f}, default "
+            f"${default['usd_per_hour']:.2f}/hr @ "
+            f"{default['worst_class_attainment']:.4f})")
+    r2 = fresh.get("surface_r2")
+    if r2 is None or not r2 >= MIN_SURFACE_R2:
+        problems.append(f"tuner: controller surface r2 {r2} below "
+                        f"{MIN_SURFACE_R2} — the fit is not trustworthy")
+    frac = fresh.get("budget", {}).get("frac")
+    if frac is None or not frac <= MAX_BUDGET_FRAC:
+        problems.append(f"tuner: racing spent {frac} of the naive sweep "
+                        f"budget (bar {MAX_BUDGET_FRAC})")
+    rve = fresh.get("race_vs_exhaustive", {})
+    if not rve.get("same_winner"):
+        problems.append(
+            "tuner: racing and the exhaustive grid sweep disagree on the "
+            f"winner ({rve.get('race_winner')} vs "
+            f"{rve.get('exhaustive_winner')})")
+    gfrac = rve.get("race_frac")
+    if gfrac is None or not gfrac <= MAX_BUDGET_FRAC:
+        problems.append(
+            f"tuner: the grid race spent {gfrac} of the exhaustive sweep "
+            f"budget (bar {MAX_BUDGET_FRAC}) — the <= 40%-with-same-winner "
+            "invariant must hold on one and the same race")
+    btuned = base.get("headline", {}).get("tuned")
+    if btuned:
+        da = btuned["worst_class_attainment"] - tuned["worst_class_attainment"]
+        if da > attain_tol:
+            problems.append(
+                f"tuner: tuned attainment dropped "
+                f"{btuned['worst_class_attainment']:.4f} -> "
+                f"{tuned['worst_class_attainment']:.4f} (tol {attain_tol})")
+        floor = max(btuned["usd_per_hour"], 1e-9)
+        if tuned["usd_per_hour"] > floor * (1.0 + cost_tol):
+            problems.append(
+                f"tuner: tuned $/hr rose {btuned['usd_per_hour']:.2f} -> "
+                f"{tuned['usd_per_hour']:.2f} (tol {cost_tol * 100:.0f}%)")
+    bwall = base.get("tuner_wall_clock_s")
+    fwall = fresh.get("tuner_wall_clock_s")
+    if bwall and fwall and fwall > max(wall_mult * bwall, WALL_FLOOR_S):
+        problems.append(
+            f"tuner: wall clock regressed {bwall:.1f}s -> {fwall:.1f}s "
+            f"(> {wall_mult:g}x baseline and > {WALL_FLOOR_S:g}s floor)")
+    return problems
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
-        description="fail when fleet benchmark results regress vs baseline")
-    ap.add_argument("fresh", help="freshly produced BENCH_fleet.json")
+        description="fail when benchmark results regress vs baseline")
+    ap.add_argument("fresh", help="freshly produced BENCH_*.json")
     ap.add_argument("--baseline", default="benchmarks/baselines/fleet.json")
     ap.add_argument("--attain-tol", type=float, default=0.02,
                     help="max absolute SLO-attainment drop (default 0.02)")
     ap.add_argument("--cost-tol", type=float, default=0.08,
                     help="max relative $/hr increase (default 8%%)")
+    ap.add_argument("--wall-mult", type=float, default=2.0,
+                    help="max tuner wall-clock multiple vs baseline")
     ap.add_argument("--write-baseline", action="store_true",
                     help="refresh the baseline from the fresh results "
                          "(after an intentional perf/cost change)")
@@ -136,6 +219,27 @@ def main(argv=None) -> int:
         print(f"no baseline at {args.baseline}; run with --write-baseline "
               "to create one", file=sys.stderr)
         return 2
+    if base.get("benchmark") != fresh.get("benchmark"):
+        # comparing against the wrong kind of baseline would skip every
+        # baseline-relative check and report a hollow green
+        print(f"baseline kind {base.get('benchmark')!r} does not match "
+              f"fresh results {fresh.get('benchmark')!r} — wrong --baseline "
+              "file?", file=sys.stderr)
+        return 2
+
+    if fresh.get("benchmark") == "controller_tuning":
+        problems = compare_tuner(fresh, base, args.attain_tol, args.cost_tol,
+                                 args.wall_mult)
+        if problems:
+            print(f"BENCH REGRESSION ({len(problems)} problem(s)):")
+            for p in problems:
+                print(f"  - {p}")
+            return 1
+        print("tuner gate green: tuned dominates default, surface r2 "
+              f"{fresh.get('surface_r2'):.3f} >= {MIN_SURFACE_R2}, racing at "
+              f"{fresh.get('budget', {}).get('frac', 0) * 100:.0f}% of the "
+              "naive budget with the exhaustive winner")
+        return 0
 
     problems = compare(fresh, base, args.attain_tol, args.cost_tol)
     n_new = len({_key(r) for r in fresh.get("records", [])}
