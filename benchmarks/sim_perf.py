@@ -1,0 +1,143 @@
+"""Simulator-backend benchmark: sequential numpy loop vs compiled JAX
+candidate x seed batching, at a grid of (candidates, seeds, bins) sizes.
+
+Each cell scores one full racing-round slate — ``evaluate_candidates`` over a
+Latin-hypercube of predictive-policy configs on the flash-crowd tuning
+scenario (the same build as ``tune_controller.py``). The numpy number is the
+reference per-candidate loop; the JAX numbers are the one-dispatch batched
+path, reported both cold (first call, includes XLA compile) and warm (the
+steady state racing actually runs in — every round after the first reuses
+the compiled program). The two backends are also cross-checked: per-seed
+scores must agree to float tolerance and pick the same winner.
+
+The headline ``tools/check_bench.py`` gates (``BENCH_sim.json`` vs
+``benchmarks/baselines/sim.json``): on the tune_controller-sized round
+(24 candidates x 12 seeds x 720 bins) the warm JAX path must beat the numpy
+loop by at least 5x (with an absolute wall-clock grace floor for machines
+where both are too fast to time), and the backends must agree.
+
+    PYTHONPATH=src python benchmarks/sim_perf.py [--full] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from repro.fleet import Objective, PredictivePolicy, evaluate_candidates
+
+# the scenario IS tune_controller's (one shared builder, so the gated
+# "tune_controller-sized round" claim cannot drift out of lockstep)
+from tune_controller import SEED, build_scenario as _tuner_scenario
+
+HEADLINE = (24, 12, 3600.0)     # candidates x seeds x 720 bins (dt = 5 s)
+GRID = ((8, 8, 720.0), HEADLINE)
+GRID_FULL = GRID + ((48, 16, 3600.0),)
+WARM_REPS = 3
+
+
+def build_scenario(n_seeds: int, duration_s: float, backend: str):
+    return _tuner_scenario(backend=backend, n_seeds=n_seeds,
+                           duration_s=duration_s)
+
+
+def bench_cell(n_candidates: int, n_seeds: int, duration_s: float) -> dict:
+    objective = Objective(min_attainment=1.0, penalty_usd_per_hour=1e5)
+    candidates = PredictivePolicy.param_space().sample_lhs(n_candidates,
+                                                          seed=SEED)
+    ts_np = build_scenario(n_seeds, duration_s, "numpy")
+    ts_jx = build_scenario(n_seeds, duration_s, "jax")
+    n_bins = ts_np.workload.n_bins
+    sims = n_candidates * n_seeds
+
+    t0 = time.perf_counter()
+    ev_np = evaluate_candidates(ts_np, candidates, objective)
+    numpy_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    ev_jx = evaluate_candidates(ts_jx, candidates, objective)
+    jax_cold_s = time.perf_counter() - t0
+    warm = []
+    for _ in range(WARM_REPS):
+        t0 = time.perf_counter()
+        ev_jx = evaluate_candidates(ts_jx, candidates, objective)
+        warm.append(time.perf_counter() - t0)
+    jax_warm_s = float(np.median(warm))
+
+    score_delta = max(float(np.abs(a.score - b.score).max())
+                      for a, b in zip(ev_np, ev_jx))
+    same_winner = (min(ev_np, key=lambda e: e.mean_score()).params
+                   == min(ev_jx, key=lambda e: e.mean_score()).params)
+    return {
+        "n_candidates": n_candidates, "n_seeds": n_seeds, "n_bins": n_bins,
+        "sims": sims,
+        "numpy_s": numpy_s, "jax_cold_s": jax_cold_s,
+        "jax_warm_s": jax_warm_s,
+        "numpy_sims_per_s": sims / max(numpy_s, 1e-9),
+        "jax_sims_per_s": sims / max(jax_warm_s, 1e-9),
+        "speedup_warm": numpy_s / max(jax_warm_s, 1e-9),
+        "speedup_cold": numpy_s / max(jax_cold_s, 1e-9),
+        "max_score_delta": score_delta, "same_winner": bool(same_winner),
+    }
+
+
+def run(full: bool = False) -> dict:
+    records = [bench_cell(*cell) for cell in (GRID_FULL if full else GRID)]
+    head = next(r for r in records
+                if (r["n_candidates"], r["n_seeds"]) == HEADLINE[:2])
+    return {
+        "benchmark": "sim_perf",
+        "full": full,
+        "scenario": "mset-surveil/flash-crowd (tune_controller build)",
+        "policy_family": "predictive",
+        "records": records,
+        "headline": {
+            "grid": f"{head['n_candidates']}x{head['n_seeds']}"
+                    f"x{head['n_bins']}",
+            "speedup": head["speedup_warm"],
+            "speedup_cold": head["speedup_cold"],
+            "numpy_s": head["numpy_s"],
+            "jax_warm_s": head["jax_warm_s"],
+            "jax_cold_s": head["jax_cold_s"],
+        },
+        "agreement": {
+            "max_score_delta": max(r["max_score_delta"] for r in records),
+            "same_winner": all(r["same_winner"] for r in records),
+        },
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="add the 48x16x720 cell")
+    ap.add_argument("--out", default="BENCH_sim.json",
+                    help="JSON results path (CI uploads this artifact)")
+    args = ap.parse_args()
+    bench = run(full=args.full)
+    with open(args.out, "w") as f:
+        json.dump(bench, f, indent=2)
+    hdr = (f"{'cands':>6} {'seeds':>6} {'bins':>6} {'numpy':>9} "
+           f"{'jax cold':>9} {'jax warm':>9} {'speedup':>8}")
+    print(hdr)
+    for r in bench["records"]:
+        print(f"{r['n_candidates']:>6} {r['n_seeds']:>6} {r['n_bins']:>6} "
+              f"{r['numpy_s']:>8.2f}s {r['jax_cold_s']:>8.2f}s "
+              f"{r['jax_warm_s']:>8.3f}s {r['speedup_warm']:>7.1f}x")
+    h = bench["headline"]
+    print(f"\nheadline ({h['grid']}): {h['speedup']:.1f}x warm "
+          f"({h['numpy_s']:.2f}s numpy vs {h['jax_warm_s']:.3f}s jax; "
+          f"cold {h['jax_cold_s']:.2f}s), "
+          f"max score delta {bench['agreement']['max_score_delta']:.2e}")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

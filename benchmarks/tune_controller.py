@@ -55,12 +55,18 @@ def _eval_record(ev):
     }
 
 
-def build_scenario(full: bool = False):
+def build_scenario(full: bool = False, backend: str = "numpy", *,
+                   n_seeds: int = None, duration_s: float = None):
+    """The flash-crowd predictive-tuning scenario. ``sim_perf.py`` builds
+    its grid cells through this same function (overriding only
+    ``n_seeds``/``duration_s``), so its gated headline really is this
+    benchmark's round at this benchmark's scale."""
     scenario = mset_scenario(n_signals=1024, n_memvec=4096, fleet=8,
                              slo_s=1.0)
     svc = scenario.service_for(scenario.cheapest_shape())
-    duration = 7200.0 if full else 3600.0
-    n_seeds = 16 if full else 12
+    duration = duration_s if duration_s is not None \
+        else (7200.0 if full else 3600.0)
+    n_seeds = n_seeds if n_seeds is not None else (16 if full else 12)
     # size the flash crowd so the quota CAN hold the peak (~14 of 16
     # replicas): the SLO is achievable and the controller's knobs — not raw
     # capacity — decide cost and attainment
@@ -72,11 +78,11 @@ def build_scenario(full: bool = False):
     fleet = FleetConfig((scenario.pool_for(shape, cold_start_s=COLD_START_S,
                                            max_replicas=QUOTA),))
     return tuning_scenario(scenario, trace, PredictivePolicy, fleet=fleet,
-                           cold_start_s=COLD_START_S)
+                           cold_start_s=COLD_START_S, backend=backend)
 
 
-def run(full: bool = False):
-    ts = build_scenario(full)
+def run(full: bool = False, backend: str = "numpy"):
+    ts = build_scenario(full, backend=backend)
     space = PredictivePolicy.param_space()
     # the quota can hold the whole burst, so demand full attainment and make
     # any shortfall unprofitable: the race is then purely about who meets the
@@ -99,6 +105,7 @@ def run(full: bool = False):
     bench = {
         "benchmark": "controller_tuning",
         "full": full,
+        "backend": backend,
         "scenario": ts.name,
         "policy_family": report.policy_family,
         "space": {d.name: type(d).__name__ for d in space.dims},
@@ -134,8 +141,13 @@ def main():
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--out", default="BENCH_tuner.json",
                     help="JSON results path (CI uploads this artifact)")
+    ap.add_argument("--backend", default="numpy",
+                    choices=("numpy", "jax", "auto"),
+                    help="simulator backend candidates are scored on "
+                         "(default numpy: the committed baseline's path; "
+                         "jax = compiled batched rounds, see sim_perf.py)")
     args = ap.parse_args()
-    report, bench = run(full=args.full)
+    report, bench = run(full=args.full, backend=args.backend)
     with open(args.out, "w") as f:
         json.dump(bench, f, indent=2)
     print(report.summary())

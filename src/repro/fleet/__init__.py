@@ -14,8 +14,9 @@ from repro.fleet.cohort import (CohortMetrics, cohort_metrics,
                                 multiclass_cohort_metrics, row_searchsorted)
 from repro.fleet.discipline import (DISCIPLINES, CohortQueue, Discipline,
                                     EDFDiscipline, FIFODiscipline,
-                                    PriorityDiscipline, get_discipline,
-                                    split_service)
+                                    PriorityDiscipline, cohort_tables,
+                                    get_discipline, split_service)
+from repro.fleet.kernels import KernelObs, PolicyKernel, make_kernel
 from repro.fleet.report import (CLASS_HEADERS, REPORT_HEADERS, ClassReport,
                                 FleetReport, best_per_trace, class_table,
                                 comparison_table, cost_efficiency_table,
@@ -24,7 +25,8 @@ from repro.fleet.scenarios import (Scenario, interactive_batch_workload,
                                    lm_decode_scenario, mset_scenario,
                                    tiered_sla_workload)
 from repro.fleet.simulator import (FleetConfig, FleetObs, PoolConfig,
-                                   SimResult, simulate, simulate_fleet)
+                                   SimResult, draw_cold_start_delays,
+                                   simulate, simulate_fleet)
 from repro.fleet.traces import (Trace, diurnal_trace, flash_crowd_trace,
                                 load_trace_csv, poisson_trace, ramp_trace,
                                 replay_trace, standard_traces)
@@ -43,7 +45,9 @@ __all__ = [
     "default_policies", "CohortMetrics", "cohort_metrics",
     "multiclass_cohort_metrics", "row_searchsorted", "DISCIPLINES",
     "CohortQueue", "Discipline", "EDFDiscipline", "FIFODiscipline",
-    "PriorityDiscipline", "get_discipline", "split_service", "CLASS_HEADERS",
+    "PriorityDiscipline", "cohort_tables", "get_discipline", "split_service",
+    "KernelObs", "PolicyKernel", "make_kernel", "draw_cold_start_delays",
+    "CLASS_HEADERS",
     "REPORT_HEADERS", "ClassReport", "FleetReport", "best_per_trace",
     "class_table", "comparison_table", "cost_efficiency_table", "summarize",
     "weighted_percentile", "Scenario", "interactive_batch_workload",

@@ -13,6 +13,12 @@ All policies are vectorized over Monte Carlo seeds: ``decide`` receives
   ahead and provisions for it; its *shape* is pre-picked by the scoping stack
   (``recommend()`` over CellResult rows) and its capacity estimate comes from a
   ``ResponseSurface`` fitted on the service batch time over the batch grid.
+
+Each built-in family also has a *functional kernel* — the pure
+``init/step``-over-arrays decomposition the compiled simulator backend scans
+and batches (``repro.fleet.kernels``). ``Policy.kernel()`` resolves it;
+custom subclasses may override it to ride the compiled path, or leave it
+returning ``None`` to stay on the numpy reference loop.
 """
 from __future__ import annotations
 
@@ -57,6 +63,19 @@ class Policy:
     def from_params(cls, params: dict, **context):
         """Build an instance from one sampled ``param_space()`` point."""
         raise NotImplementedError(f"{cls.__name__} declares no param space")
+
+    def kernel(self, fleet, classes, **kw):
+        """The functional form of this policy's family for the compiled
+        simulator backend (``repro.fleet.kernels.PolicyKernel``), or ``None``
+        when the family has none (the numpy reference path then runs the
+        object policy as-is). ``self`` doubles as the reference instance for
+        family structure that is not a tunable knob (capacity rate,
+        base/burst pool split). Subclasses with their own pure
+        ``init/step`` decomposition may override this; returning the SAME
+        kernel object for equal configs keeps the backend's jit cache warm
+        and lets candidate slates batch."""
+        from repro.fleet.kernels import make_kernel
+        return make_kernel(self, fleet, classes, **kw)
 
 
 class _RateForecaster:

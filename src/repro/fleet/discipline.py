@@ -193,6 +193,50 @@ class CohortQueue:
         return served
 
 
+def cohort_tables(discipline, classes, n_bins: int, dt_s: float) -> dict:
+    """Static serve-order tables for the compiled (JAX) simulator backend.
+
+    ``CohortQueue.serve`` pours capacity into cohorts in increasing
+    (key, class) order, heads advancing FIFO within each class. Because
+    within-class keys are non-decreasing in the arrival bin, that order is a
+    *static* permutation of the ``n_classes x n_bins`` cohorts — nothing about
+    it depends on the simulated masses. A compiled backend can therefore
+    replace the data-dependent pour loop with a binary search over prefix
+    ranks of the global order (``repro.fleet.jaxsim``). Returns plain numpy
+    arrays (they are data to the compiled path, so one jitted program serves
+    every discipline):
+
+    * ``cnt`` (C, C*T+1) int32 — ``cnt[c, r]``: how many class-c cohorts sit
+      among the first ``r`` cohorts of the global order; indexes the
+      per-class cumulative-admitted curve to price a prefix.
+    * ``cls_of_rank`` (C*T,) int32 — the class of the cohort at each global
+      rank (the marginal cohort of a partial pour).
+    * ``drop_rank`` (T, C) int32 — admission-shedding class order per arrival
+      bin (largest key first, ties to the higher class index), matching
+      ``CohortQueue.drop_order``.
+    """
+    disc = get_discipline(discipline)
+    classes = tuple(classes)
+    C = len(classes)
+    keys = np.asarray(disc.keys(classes, n_bins, dt_s), float)
+    if keys.shape != (C, n_bins):
+        raise ValueError(f"{disc.name}: keys shape {keys.shape} != "
+                         f"{(C, n_bins)}")
+    cls_idx = np.repeat(np.arange(C), n_bins)
+    bin_idx = np.tile(np.arange(n_bins), C)
+    # lexsort: primary = key, then class (pour ties go to the lower class),
+    # then bin (stable FIFO within a class)
+    order = np.lexsort((bin_idx, cls_idx, keys.ravel()))
+    cls_of_rank = cls_idx[order].astype(np.int32)
+    cnt = np.zeros((C, C * n_bins + 1), np.int32)
+    cnt[:, 1:] = np.cumsum(cls_of_rank[None, :] == np.arange(C)[:, None],
+                           axis=1)
+    drop_rank = np.empty((n_bins, C), np.int32)
+    for t in range(n_bins):
+        drop_rank[t] = np.lexsort((-np.arange(C), -keys[:, t]))
+    return {"cnt": cnt, "cls_of_rank": cls_of_rank, "drop_rank": drop_rank}
+
+
 def split_service(discipline, classes, admitted: np.ndarray,
                   capacity: np.ndarray, slot_bin: np.ndarray,
                   dt_s: float = 1.0) -> np.ndarray:

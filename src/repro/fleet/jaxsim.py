@@ -1,0 +1,270 @@
+"""Compiled fleet-simulator backend: ``lax.scan`` over time bins, ``vmap``
+over Monte Carlo seeds, ``vmap`` over candidate configs.
+
+The numpy simulator (``repro.fleet.simulator``) is the reference
+implementation; its inner loop is a Python ``for t in range(T)`` with a
+data-dependent cohort pour per bin, so a tuning round pays Python dispatch
+``n_candidates x n_bins`` times. This module re-expresses the per-bin update
+as a pure function of fixed-shape arrays and compiles the whole
+(candidate, seed, bin) lattice into one XLA program:
+
+* **time** is a ``lax.scan`` whose carry is the queue/fleet state
+  (per-class cumulative admitted+served curves, ready/cold-starting replicas,
+  the pending-launch ledger, policy-kernel state);
+* **the cohort pour** becomes a binary search: cohort service order is a
+  static permutation of (class, arrival-bin) cohorts
+  (``discipline.cohort_tables``), so "pour ``amount`` in key order" is
+  "find the minimal global-order prefix whose admitted mass covers
+  ``amount``" — ~log2(C*T) fixed iterations instead of a while loop;
+* **scale-down cancellation** (newest pending launches first) becomes a
+  reverse-cumsum water-fill over the pending-launch window;
+* **the policy** runs as a functional kernel (``repro.fleet.kernels``), its
+  tunable knobs passed as arrays — which is what lets a whole racing round
+  (every candidate x every seed) batch into ONE jitted call.
+
+Everything runs in float64 via a scoped ``enable_x64`` so the compiled path
+agrees with the numpy reference to float rounding; candidate batches are
+padded to power-of-two sizes so racing's shrinking rounds reuse a handful of
+compiled programs instead of recompiling per round.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+_EPS = 1e-12
+
+
+def available() -> bool:
+    """True when jax is importable (the compiled backend can run)."""
+    try:
+        import jax  # noqa: F401
+        return True
+    except Exception:
+        return False
+
+
+# One compiled core per (kernel, static-shape) signature; kernels are cached
+# by config (kernels._KERNEL_CACHE), so repeated rounds of one tuning run —
+# and repeated simulations of one scenario — all hit the same entry.
+_CORE_CACHE: dict = {}
+
+
+def _build_core(kernel, *, T, C, P, Tpad, W, dt, order, t_fixed, t_unit,
+                max_b, max_queue):
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    CT = C * T
+    n_rank_iters = max(int(np.ceil(np.log2(CT + 1))), 1)
+    arange_c = jnp.arange(C)
+
+    def serve(Acum, done, amt, cnt, cls_rank):
+        """Pour ``amt`` into cohorts in global key order: binary-search the
+        minimal prefix rank whose admitted mass covers ``amt``, serve every
+        cohort below it fully and the marginal cohort partially. ``Acum`` is
+        the (C, T+1) cumulative-admitted curve (leading zero), ``done`` the
+        (C,) served totals; returns the (C,) per-class split."""
+        def take(r):
+            j = cnt[:, r]                       # class-c cohorts in prefix r
+            a = jnp.take_along_axis(Acum, j[:, None], axis=1)[:, 0]
+            return jnp.clip(a - done, 0.0, None)
+
+        full = take(CT)
+        amt = jnp.minimum(jnp.maximum(amt, 0.0), full.sum())
+
+        def bisect(_, lohi):
+            lo, hi = lohi
+            mid = (lo + hi) // 2
+            ge = take(mid).sum() >= amt
+            return (jnp.where(ge, lo, mid + 1), jnp.where(ge, mid, hi))
+
+        lo, _ = lax.fori_loop(0, n_rank_iters, bisect,
+                              (jnp.int32(0), jnp.int32(CT)))
+        rm1 = jnp.maximum(lo - 1, 0)
+        base = take(rm1)
+        marginal = cls_rank[rm1]
+        served = base + jnp.maximum(amt - base.sum(), 0.0) \
+            * (arange_c == marginal)
+        return jnp.where(lo > 0, served, jnp.zeros(C))
+
+    def sim_one(arr, rate, rate_sum, jb, cnt, cls_rank, drop_rank, kp,
+                min_rep, max_rep, init_ready):
+        """One (candidate, seed) trajectory. arr (T, C) float arrivals;
+        rate (T, C) / rate_sum (T,) are the per-class and aggregate arrival
+        rates divided by dt on the HOST — XLA rewrites division by a
+        constant into an inexact reciprocal multiply, which would shift
+        rates by an ulp and flip policy ceil()s vs the numpy reference;
+        jb (T, P) int launch-landing offsets; tables/params per candidate."""
+        col = jnp.arange(T + 1)
+
+        def step(carry, x):
+            ready, in_flight, pend, done, Acum, pstate = carry
+            arr_c, rate_c, rate_sum, jb_t, t = x
+            matured = pend[t]
+            ready = ready + matured
+            in_flight = in_flight - matured
+
+            total_prev = Acum[:, T]
+            drop = jnp.zeros(C)
+            if max_queue is not None:
+                over = jnp.maximum((total_prev - done).sum() + arr_c.sum()
+                                   - max_queue, 0.0)
+                order_t = drop_rank[t]
+                for rank in range(C):
+                    c = order_t[rank]
+                    d = jnp.minimum(arr_c[c], over)
+                    drop = drop.at[c].add(d)
+                    over = over - d
+            adm_c = arr_c - drop
+            new_total = total_prev + adm_c
+            Acum = jnp.where(col[None, :] >= t + 1, new_total[:, None], Acum)
+
+            remaining = (new_total - done).sum()
+            capacity = 0.0
+            slot_split, slot_bt, slot_served = [], [], []
+            for p in order:                       # static drain order
+                n = jnp.maximum(ready[p], 0.0)
+                has = n > 0
+                b = jnp.clip(jnp.where(
+                    has, jnp.ceil(remaining / jnp.where(has, n, 1.0)), 0.0),
+                    1.0, max_b[p])
+                bt = jnp.maximum(t_fixed[p] + b * t_unit[p], _EPS)
+                cap = jnp.where(has, n * b / bt, 0.0) * dt
+                split = serve(Acum, done, jnp.minimum(remaining, cap),
+                              cnt, cls_rank)
+                done = done + split
+                s_p = split.sum()
+                remaining = remaining - s_p
+                capacity = capacity + cap
+                slot_split.append(split)
+                slot_bt.append(bt)
+                slot_served.append(s_p)
+
+            # fold sub-eps float residue of a drained class into "empty" —
+            # the numpy pour's _MASS_EPS behaviour; without it a ~1e-11
+            # leftover queue can flip a policy ceil() on the next bin
+            done = jnp.where(new_total - done <= 1e-9 + 1e-12 * new_total,
+                             new_total, done)
+            queue_c = jnp.maximum(new_total - done, 0.0)
+            served = sum(slot_served)
+            util = jnp.where(capacity > 0, served / capacity, 0.0)
+            from repro.fleet.kernels import KernelObs
+            obs = KernelObs(
+                t_s=(t + 1) * dt, dt_s=dt, arrival_rate=rate_sum,
+                queue=queue_c.sum(), replicas=ready.sum(),
+                in_flight=in_flight.sum(), utilization=util,
+                pool_replicas=ready, pool_in_flight=in_flight,
+                class_queue=queue_c, class_arrival_rate=rate_c,
+                min_replicas=min_rep, max_replicas=max_rep)
+            pool_rep = ready                      # pre-decision (serving) fleet
+            pstate, target = kernel.step(kp, pstate, obs)
+            target = jnp.clip(target, min_rep, max_rep)
+
+            # scale down: cancel pending launches newest-first (reverse
+            # water-fill over the cold-start window), then shrink ready
+            excess = jnp.maximum(ready + in_flight - target, 0.0)
+            zero = jnp.int32(0)
+            window = lax.dynamic_slice(pend, (t + 1, zero), (W, P))
+            newer = jnp.cumsum(window[::-1, :], axis=0)[::-1, :] - window
+            cut = jnp.clip(excess[None, :] - newer, 0.0, window)
+            window = window - cut
+            canceled = cut.sum(axis=0)
+            pend = lax.dynamic_update_slice(pend, window, (t + 1, zero))
+            in_flight = in_flight - canceled
+            ready = jnp.maximum(ready - (excess - canceled), 0.0)
+            grow = jnp.maximum(target - ready - in_flight, 0.0)
+            pend = pend.at[t + 1 + jb_t, jnp.arange(P)].add(grow)
+            in_flight = in_flight + grow
+            billed = pool_rep + in_flight
+
+            ys = {"slot_split": jnp.stack(slot_split),    # (P, C) rank order
+                  "slot_bt": jnp.stack(slot_bt),          # (P,)
+                  "slot_served": jnp.stack(slot_served),  # (P,)
+                  "admitted_c": adm_c, "dropped_c": drop,
+                  "queue_c": queue_c, "pool_rep": pool_rep,
+                  "billed": billed, "util": util}
+            return (ready, in_flight, pend, done, Acum, pstate), ys
+
+        carry0 = (init_ready, jnp.zeros(P), jnp.zeros((Tpad, P)),
+                  jnp.zeros(C), jnp.zeros((C, T + 1)), kernel.init())
+        xs = (arr, rate, rate_sum, jb, jnp.arange(T, dtype=jnp.int32))
+        _, ys = lax.scan(step, carry0, xs)
+        return ys
+
+    over_seeds = jax.vmap(sim_one,
+                          in_axes=(0, 0, 0, 0, None, None, None, None, None,
+                                   None, None))
+    over_cands = jax.vmap(over_seeds,
+                          in_axes=(None, None, None, None, 0, 0, 0, 0, 0, 0,
+                                   0))
+    return jax.jit(over_cands)
+
+
+def _core_for(kernel, **statics):
+    key = (id(kernel),) + tuple(sorted(
+        (k, tuple(v) if isinstance(v, (list, np.ndarray)) else v)
+        for k, v in statics.items()))
+    core = _CORE_CACHE.get(key)
+    if core is None:
+        core = _build_core(kernel, **statics)
+        _CORE_CACHE[key] = core
+    return core
+
+
+def _pad_pow2(n: int) -> int:
+    return 1 << max(int(np.ceil(np.log2(max(n, 1)))), 0)
+
+
+def run_dynamics(kernel, *, arrivals, jb, dt, order, t_fixed, t_unit, max_b,
+                 max_queue, tables, kp, min_rep, max_rep, init_ready,
+                 max_cold_bins) -> dict:
+    """Run the compiled dynamics for a stacked batch of candidates against a
+    shared seed batch; one jitted dispatch covers the whole lattice.
+
+    arrivals (S, T, C) and jb (S, T, P) are shared across candidates (the
+    paired common-random-numbers design); ``tables`` (stacked
+    ``cohort_tables``), ``kp`` (stacked kernel params), quota bounds and
+    initial fleets are per-candidate with leading dim N. Returns numpy
+    arrays with leading dims (N, S, T). Candidate batches are padded to the
+    next power of two (padding replays candidate 0) so racing's shrinking
+    rounds hit a handful of compiled programs.
+    """
+    import jax
+    from jax.experimental import enable_x64
+
+    arrivals = np.asarray(arrivals, np.float64)
+    S, T, C = arrivals.shape
+    P = len(order)
+    N = len(min_rep)
+    Npad = _pad_pow2(N)
+
+    def pad(a):
+        a = np.asarray(a)
+        if Npad == N:
+            return a
+        reps = np.repeat(a[:1], Npad - N, axis=0)
+        return np.concatenate([a, reps], axis=0)
+
+    core = _core_for(
+        kernel, T=T, C=C, P=P, Tpad=T + max_cold_bins + 2,
+        W=max_cold_bins + 1, dt=float(dt), order=tuple(order),
+        t_fixed=tuple(float(v) for v in t_fixed),
+        t_unit=tuple(float(v) for v in t_unit),
+        max_b=tuple(float(v) for v in max_b),
+        max_queue=None if max_queue is None else float(max_queue))
+    # host-side divisions: XLA folds constant divisors into inexact
+    # reciprocal multiplies, but policy ceil()s must see the exact IEEE
+    # quotients the numpy reference sees
+    rate = arrivals / float(dt)
+    rate_sum = arrivals.sum(axis=2) / float(dt)
+    with enable_x64():
+        out = core(arrivals, rate, rate_sum, np.asarray(jb, np.int32),
+                   pad(tables["cnt"]), pad(tables["cls_of_rank"]),
+                   pad(tables["drop_rank"]),
+                   {k: pad(v) for k, v in kp.items()},
+                   pad(np.asarray(min_rep, np.float64)),
+                   pad(np.asarray(max_rep, np.float64)),
+                   pad(np.asarray(init_ready, np.float64)))
+        out = jax.device_get(out)
+    return {k: np.asarray(v)[:N] for k, v in out.items()}

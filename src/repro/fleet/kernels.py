@@ -1,0 +1,335 @@
+"""Functional policy kernels: the compiled-backend counterpart of
+``repro.fleet.autoscaler``'s object policies.
+
+An object policy is a stateful Python callable (``reset``/``decide``) — fine
+for the numpy simulator, but opaque to ``lax.scan``: the compiled backend
+needs the policy as pure functions over arrays. A ``PolicyKernel`` is exactly
+that decomposition for one policy *family*:
+
+* ``params_of(policy)``  — extract the tunable knobs of one configured
+  instance as a flat dict of scalars. Stacking these dicts across candidate
+  configs gives the pytree ``jax.vmap`` batches a whole racing round over.
+* ``init()``             — the per-seed controller state (forecaster ring
+  buffers, cooldown clocks) as a pytree of arrays, traced inside the scan.
+* ``step(params, state, obs) -> (state, target)`` — one control decision;
+  ``obs`` is a per-seed :class:`KernelObs`, ``target`` the (n_pools,) replica
+  ask before quota clipping.
+
+Anything a family needs beyond its knobs (service throughputs, the
+recommend()-derived capacity rate, base/burst pool split, class SLOs) is
+baked into the kernel's closures at build time — it is scenario structure,
+identical across the candidates of a tuning round.
+
+Ring-buffer sizes are static: a kernel built with ``max_window=W`` masks down
+to each candidate's own ``window_bins <= W``, so candidates with different
+windows still batch into one jitted program. Policies with no kernel (custom
+Python subclasses, ``build_policy`` overrides) simply return ``None`` from
+:func:`make_kernel` and keep running on the numpy reference path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, NamedTuple
+
+import numpy as np
+
+from repro.fleet.autoscaler import (HeterogeneousPredictivePolicy,
+                                    PredictivePolicy, QueueProportionalPolicy,
+                                    ReactivePolicy, StaticPolicy)
+
+_EPS = 1e-12
+
+
+class KernelObs(NamedTuple):
+    """Per-seed observation handed to ``PolicyKernel.step`` — the scalar
+    mirror of :class:`repro.fleet.simulator.FleetObs` (arrays noted)."""
+    t_s: object                 # sim time at bin end
+    dt_s: object
+    arrival_rate: object        # requests/s this bin, all classes
+    queue: object               # backlog after serving/drops, all classes
+    replicas: object            # ready replicas this bin, all pools
+    in_flight: object           # replicas still cold-starting, all pools
+    utilization: object         # served / capacity, in [0, 1]
+    pool_replicas: object       # (n_pools,) ready per pool
+    pool_in_flight: object      # (n_pools,) cold-starting per pool
+    class_queue: object         # (n_classes,) backlog per class
+    class_arrival_rate: object  # (n_classes,) req/s per class
+    min_replicas: object        # (n_pools,) candidate quota floor
+    max_replicas: object        # (n_pools,) candidate quota ceiling
+
+
+@dataclass(frozen=True)
+class PolicyKernel:
+    """One policy family as pure functions (see module docstring)."""
+    name: str
+    param_names: tuple
+    params_of: Callable         # Policy instance -> {name: float}
+    init: Callable              # () -> per-seed state pytree (traced)
+    step: Callable              # (params, state, obs) -> (state, (P,) target)
+
+
+def _queue_demand(obs: KernelObs, horizon_s, slos: np.ndarray):
+    """Backlog-drain demand in req/s — ``autoscaler._queue_demand``."""
+    import jax.numpy as jnp
+
+    if len(slos) <= 1:
+        return obs.queue / jnp.maximum(horizon_s, obs.dt_s)
+    h = jnp.maximum(jnp.minimum(horizon_s, jnp.asarray(slos)), obs.dt_s)
+    return (obs.class_queue / h).sum()
+
+
+def _push(hist, value):
+    import jax.numpy as jnp
+    return jnp.concatenate([hist[1:], jnp.reshape(value, (1,))])
+
+
+def _forecast(hist, n_obs, window_bins, horizon_s, dt_s):
+    """Masked-window mirror of ``_RateForecaster.observe``'s return value:
+    linear trend over the last ``min(n_obs, window_bins)`` rates, projected
+    one horizon ahead (falls back to the last rate below 3 observations)."""
+    import jax.numpy as jnp
+
+    W = hist.shape[0]
+    w = jnp.minimum(n_obs, window_bins)
+    age = jnp.arange(W)[::-1]           # 0 = the latest observation
+    mask = age < w
+    x = (w - 1) / 2.0 - age             # the centered index of _RateForecaster
+    sx2 = jnp.sum(jnp.where(mask, x * x, 0.0))
+    # keep the numpy reference's exact arithmetic (sum of x*(H - mean), not
+    # the algebraically-equal sum of x*H): the two round differently at the
+    # ulp level, and an ulp on the forecast can flip a downstream ceil()
+    mean = jnp.sum(jnp.where(mask, hist, 0.0)) / jnp.maximum(w, 1)
+    slope = jnp.sum(jnp.where(mask, x * (hist - mean), 0.0)) \
+        / jnp.maximum(sx2, _EPS)
+    last = hist[-1]
+    return jnp.where(w >= 3, last + slope * (horizon_s / dt_s), last)
+
+
+def _mean_rate(hist, n_obs, window_bins):
+    """``_RateForecaster.mean_rate`` over the masked window."""
+    import jax.numpy as jnp
+
+    W = hist.shape[0]
+    w = jnp.minimum(jnp.maximum(n_obs, 1), window_bins)
+    age = jnp.arange(W)[::-1]
+    return jnp.sum(jnp.where(age < w, hist, 0.0)) / w
+
+
+def _static_kernel(fleet, classes) -> PolicyKernel:
+    import jax.numpy as jnp
+
+    def step(kp, state, obs):
+        return state, jnp.full((1,), kp["n_replicas"])
+
+    return PolicyKernel(
+        name="static", param_names=("n_replicas",),
+        params_of=lambda pol: {"n_replicas": float(pol.n)},
+        init=lambda: (), step=step)
+
+
+def _reactive_kernel(fleet, classes) -> PolicyKernel:
+    import jax.numpy as jnp
+
+    def init():
+        return {"last": jnp.asarray(-jnp.inf)}
+
+    def step(kp, state, obs):
+        total = obs.replicas + obs.in_flight
+        actionable = obs.t_s - state["last"] >= kp["cooldown_s"]
+        starved = (total < 1) & ((obs.queue >= 1) | (obs.arrival_rate > 0))
+        up = (actionable & (obs.utilization >= kp["upper"])) | starved
+        down = (actionable & ~starved & (obs.utilization <= kp["lower"])
+                & (obs.queue < 1))
+        t_up = jnp.maximum(
+            total + jnp.maximum(jnp.ceil(total * kp["scale_up_frac"]), 1.0),
+            1.0)
+        t_down = total - jnp.maximum(
+            jnp.ceil(total * kp["scale_down_frac"]), 1.0)
+        target = jnp.where(up, t_up, jnp.where(down, t_down, total))
+        last = jnp.where(up | down, obs.t_s, state["last"])
+        return {"last": last}, jnp.reshape(target, (1,))
+
+    return PolicyKernel(
+        name="reactive",
+        param_names=("upper", "lower", "scale_up_frac", "scale_down_frac",
+                     "cooldown_s"),
+        params_of=lambda pol: {
+            "upper": float(pol.upper), "lower": float(pol.lower),
+            "scale_up_frac": float(pol.up_frac),
+            "scale_down_frac": float(pol.down_frac),
+            "cooldown_s": float(pol.cooldown_s)},
+        init=init, step=step)
+
+
+def _queue_prop_kernel(fleet, classes) -> PolicyKernel:
+    import jax.numpy as jnp
+
+    slos = np.array([c.slo_s for c in classes], float)
+    mt0 = float(fleet.pools[0].service.max_throughput)
+
+    def step(kp, state, obs):
+        demand = obs.arrival_rate + _queue_demand(obs, kp["drain_s"], slos)
+        per = jnp.maximum(mt0 * kp["headroom"], _EPS)
+        target = jnp.ceil(jnp.maximum(demand, 0.0) / per)
+        return state, jnp.reshape(target, (1,))
+
+    return PolicyKernel(
+        name="queue-prop", param_names=("drain_s", "headroom"),
+        params_of=lambda pol: {"drain_s": float(pol.drain_s),
+                               "headroom": float(pol.headroom)},
+        init=lambda: (), step=step)
+
+
+def _predictive_kernel(fleet, classes, reference: PredictivePolicy,
+                       max_window: int = None) -> PolicyKernel:
+    import jax.numpy as jnp
+
+    slos = np.array([c.slo_s for c in classes], float)
+    rate = float(reference._rate)   # recommend()+surface capacity: not a knob
+    W = int(max_window or reference.forecaster.window_bins)
+
+    def init():
+        return {"hist": jnp.zeros(W), "n_obs": jnp.asarray(0)}
+
+    def step(kp, state, obs):
+        hist = _push(state["hist"], obs.arrival_rate)
+        n_obs = state["n_obs"] + 1
+        forecast = _forecast(hist, n_obs, kp["window_bins"],
+                             kp["horizon_s"], obs.dt_s)
+        demand = jnp.maximum(forecast, obs.arrival_rate) \
+            + _queue_demand(obs, kp["horizon_s"], slos)
+        per = jnp.maximum(rate * kp["headroom"], _EPS)
+        target = jnp.ceil(jnp.maximum(demand, 0.0) / per)
+        return {"hist": hist, "n_obs": n_obs}, jnp.reshape(target, (1,))
+
+    return PolicyKernel(
+        name="predictive",
+        param_names=("horizon_s", "window_bins", "headroom"),
+        params_of=lambda pol: {
+            "horizon_s": float(pol.horizon_s),
+            "window_bins": float(pol.forecaster.window_bins),
+            "headroom": float(pol.headroom)},
+        init=init, step=step)
+
+
+def _hetero_kernel(fleet, classes, reference: HeterogeneousPredictivePolicy,
+                   max_window: int = None,
+                   max_sustain: int = None) -> PolicyKernel:
+    import jax.numpy as jnp
+
+    P = fleet.n_pools
+    C = len(classes)
+    slos = np.array([c.slo_s for c in classes], float)
+    mt = np.array([p.service.max_throughput for p in fleet.pools], float)
+    base = int(reference.base_idx)
+    burst = tuple(int(i) for i in reference.burst_idx)
+    W = int(max_window or reference.forecaster.window_bins)
+    Ws = int(max_sustain or reference.sustain.window_bins)
+    lag = (max(fleet.pools[i].cold_start_mean_s for i in burst)
+           if burst else 0.0)
+    crit = slos <= lag              # classes too tight for burst cold starts
+
+    def init():
+        return {"hist": jnp.zeros(W), "sustain": jnp.zeros(Ws),
+                "n_obs": jnp.asarray(0)}
+
+    def step(kp, state, obs):
+        hist = _push(state["hist"], obs.arrival_rate)
+        sustain = _push(state["sustain"], obs.arrival_rate)
+        n_obs = state["n_obs"] + 1
+        forecast = _forecast(hist, n_obs, kp["window_bins"],
+                             kp["horizon_s"], obs.dt_s)
+        demand = jnp.maximum(
+            jnp.maximum(forecast, obs.arrival_rate)
+            + _queue_demand(obs, kp["horizon_s"], slos), 0.0)
+        per = jnp.maximum(mt * kp["headroom"], _EPS)       # (P,)
+        base_demand = _mean_rate(sustain, n_obs, kp["sustain_bins"])
+        if C > 1 and burst and crit.any():
+            h = jnp.maximum(jnp.minimum(kp["horizon_s"],
+                                        jnp.asarray(slos)), obs.dt_s)
+            cd = (jnp.where(crit, obs.class_arrival_rate, 0.0).sum()
+                  + jnp.where(crit, obs.class_queue / h, 0.0).sum())
+            base_demand = jnp.maximum(base_demand, cd)
+        base_n = jnp.clip(jnp.ceil(base_demand / per[base]),
+                          obs.min_replicas[base], obs.max_replicas[base])
+        residual = jnp.maximum(demand - base_n * per[base], 0.0)
+        target = jnp.zeros(P)
+        for i in burst:
+            n = jnp.clip(jnp.ceil(residual / per[i]),
+                         obs.min_replicas[i], obs.max_replicas[i])
+            target = target.at[i].set(n)
+            residual = jnp.maximum(residual - n * per[i], 0.0)
+        target = target.at[base].set(
+            jnp.clip(base_n + jnp.ceil(residual / per[base]),
+                     obs.min_replicas[base], obs.max_replicas[base]))
+        return ({"hist": hist, "sustain": sustain, "n_obs": n_obs}, target)
+
+    return PolicyKernel(
+        name="hetero-predictive",
+        param_names=("horizon_s", "window_bins", "sustain_bins", "headroom"),
+        params_of=lambda pol: {
+            "horizon_s": float(pol.horizon_s),
+            "window_bins": float(pol.forecaster.window_bins),
+            "sustain_bins": float(pol.sustain.window_bins),
+            "headroom": float(pol.headroom)},
+        init=init, step=step)
+
+
+_KERNEL_CACHE: dict = {}
+
+
+def _kernel_key(policy, fleet, classes, max_window, max_sustain):
+    """Config tuple fully determining a kernel's closures — identical configs
+    share one kernel object, so the compiled backend's jit cache keeps
+    hitting across racing rounds and repeated simulations."""
+    slos = tuple(float(c.slo_s) for c in classes)
+    if type(policy) is StaticPolicy:
+        return ("static",)
+    if type(policy) is ReactivePolicy:
+        return ("reactive",)
+    if type(policy) is QueueProportionalPolicy:
+        return ("queue-prop", float(fleet.pools[0].service.max_throughput),
+                slos)
+    if type(policy) is PredictivePolicy:
+        W = int(max_window or policy.forecaster.window_bins)
+        return ("predictive", float(policy._rate), W, slos)
+    if type(policy) is HeterogeneousPredictivePolicy:
+        W = int(max_window or policy.forecaster.window_bins)
+        Ws = int(max_sustain or policy.sustain.window_bins)
+        mt = tuple(float(p.service.max_throughput) for p in fleet.pools)
+        cs = tuple(float(p.cold_start_mean_s) for p in fleet.pools)
+        return ("hetero-predictive", mt, cs, int(policy.base_idx),
+                tuple(int(i) for i in policy.burst_idx), W, Ws, slos)
+    return None
+
+
+def make_kernel(policy, fleet, classes, *, max_window: int = None,
+                max_sustain: int = None):
+    """Build the :class:`PolicyKernel` for ``policy``'s family, or ``None``
+    when the family has no kernel (custom Python policies run on the numpy
+    reference path). ``policy`` doubles as the reference instance for the
+    family's non-tunable structure (capacity rate, base/burst split);
+    ``max_window``/``max_sustain`` set ring-buffer sizes when batching
+    candidates with different window knobs. Kernels are cached by config, so
+    equal configs return the *same* object (a jit-cache key upstream)."""
+    key = _kernel_key(policy, fleet, classes, max_window, max_sustain)
+    if key is None:
+        return None
+    kernel = _KERNEL_CACHE.get(key)
+    if kernel is not None:
+        return kernel
+    if type(policy) is StaticPolicy:
+        kernel = _static_kernel(fleet, classes)
+    elif type(policy) is ReactivePolicy:
+        kernel = _reactive_kernel(fleet, classes)
+    elif type(policy) is QueueProportionalPolicy:
+        kernel = _queue_prop_kernel(fleet, classes)
+    elif type(policy) is PredictivePolicy:
+        kernel = _predictive_kernel(fleet, classes, policy,
+                                    max_window=max_window)
+    else:
+        kernel = _hetero_kernel(fleet, classes, policy,
+                                max_window=max_window,
+                                max_sustain=max_sustain)
+    _KERNEL_CACHE[key] = kernel
+    return kernel

@@ -229,10 +229,133 @@ def _initial_replicas(pool: PoolConfig, rate0: float, provision: bool) -> int:
                        else pool.min_replicas, pool.max_replicas))
 
 
+def _cold_start_plan(pools, dt: float):
+    """Per-pool cold-start discretization: (cold_bins, scan_bins, jittered,
+    cs_mu, cs_sigma). ``scan_bins`` bounds how far ahead a jittered launch
+    can land (the ~99.9th-percentile delay, longer draws clipped there)."""
+    cold_bins = [max(int(round(p.cold_start_mean_s / dt)), 0) for p in pools]
+    # lognormal jitter: sigma^2 = ln(1 + jitter^2) keeps the sampled mean at
+    # exactly cold_start_mean_s; pend/scan slack covers the ~99.9th-percentile
+    # delay (longer draws are clipped there)
+    cs_sigma = [np.sqrt(np.log1p(p.cold_start_jitter ** 2)) for p in pools]
+    cs_mu = [np.log(max(p.cold_start_mean_s, _EPS)) - sg * sg / 2
+             for p, sg in zip(pools, cs_sigma)]
+    scan_bins = [cb if p.cold_start_jitter == 0 or p.cold_start_mean_s == 0
+                 else max(int(np.ceil(np.exp(m + 3.1 * sg) / dt)), cb, 1)
+                 for p, cb, m, sg in zip(pools, cold_bins, cs_mu, cs_sigma)]
+    jittered = [p.cold_start_jitter > 0 and p.cold_start_mean_s > 0
+                for p in pools]
+    return cold_bins, scan_bins, jittered, cs_mu, cs_sigma
+
+
+def draw_cold_start_delays(pools, n_seeds: int, n_bins: int, dt_s: float,
+                           cold_start_seed: int, seed_ids) -> np.ndarray:
+    """Pre-draw every (seed row, bin, jittered pool) spin-up delay, one
+    substream per (cold_start_seed, absolute seed, pool): the draws a row
+    sees depend only on its absolute identity, never on which slice of the
+    workload it is simulated in or on the policy — the paired-replicate
+    property candidate tuning relies on. Returns the (n_seeds, n_bins,
+    n_pools) tensor, or ``None`` when no pool is jittered. A tuning scenario
+    hoists this tensor out of the per-candidate loop
+    (``TuningScenario.cold_start_delays``)."""
+    _, _, jittered, cs_mu, cs_sigma = _cold_start_plan(pools, dt_s)
+    if not any(jittered):
+        return None
+    P = len(pools)
+    cs_delay = np.zeros((n_seeds, n_bins, P))
+    for p in range(P):
+        if not jittered[p]:
+            continue
+        for i, g in enumerate(seed_ids):
+            row_rng = np.random.default_rng((cold_start_seed, int(g), p))
+            cs_delay[i, :, p] = row_rng.lognormal(cs_mu[p], cs_sigma[p],
+                                                  size=n_bins)
+    return cs_delay
+
+
+def _assemble_result(workload, fleet: FleetConfig, disc, policy_name: str,
+                     order, slos, admitted, cls, rec, pool_rep, pool_billed,
+                     slot_served, slot_class, slot_bt) -> SimResult:
+    """Exact per-request latency + SimResult from the dynamics arrays — the
+    post-loop half of the simulation, shared by the numpy and JAX backends
+    (the compiled path reproduces the *dynamics*; this accounting is common).
+
+    Slots are (bin, drain-rank) pairs, time-ordered, matching how the queue
+    head was assigned; within a class every discipline serves FIFO, so the
+    per-class cumulative served counts recover exact sojourns."""
+    trace = workload.total_trace()
+    S, T = admitted.shape
+    P = fleet.n_pools
+    dt = trace.dt_s
+    slot_bin = np.repeat(np.arange(T), P)
+    flat_bt = slot_bt.reshape(S, T * P)
+    cms = multiclass_cohort_metrics(cls["admitted"], slot_class, slot_bin,
+                                    flat_bt, dt, slos)
+    class_ok = np.stack([cm.ok_served.reshape(S, T, P).sum(axis=2)
+                         for cm in cms], axis=2)
+    C = len(cms)
+    class_served = slot_class.reshape(S, T, P, C).sum(axis=2)
+    # per-bin mean sojourn pooled over classes and drain ranks
+    mass_soj = sum((cm.mean_sojourn * slot_class[:, :, c]).reshape(S, T, P)
+                   .sum(axis=2) for c, cm in enumerate(cms))
+    served_all = rec["served"]
+    lat = np.divide(mass_soj, served_all,
+                    out=np.zeros((S, T)), where=served_all > 0)
+    # slots are drain-rank-ordered; report per-pool served in pool order
+    rank_of = np.argsort(np.asarray(order))
+
+    return SimResult(
+        trace=trace, fleet=fleet, policy_name=policy_name,
+        slo_s=float(slos.min()),
+        arrivals=trace.arrivals.astype(float), admitted=admitted,
+        served=served_all, dropped=rec["dropped"], queue=rec["queue"],
+        replicas=rec["replicas"], billed_replicas=rec["billed"],
+        latency_s=lat, ok_served=class_ok.sum(axis=2),
+        utilization=rec["util"], pool_replicas=pool_rep,
+        pool_billed=pool_billed, pool_served=slot_served[:, :, rank_of],
+        sojourn_values=np.concatenate([cm.sojourn_values for cm in cms]),
+        sojourn_weights=np.concatenate([cm.sojourn_weights for cm in cms]),
+        workload=workload, discipline=disc.name,
+        class_admitted=cls["admitted"], class_served=class_served,
+        class_dropped=cls["dropped"], class_queue=cls["queue"],
+        class_ok=class_ok,
+        class_sojourns=tuple((cm.sojourn_values, cm.sojourn_weights)
+                             for cm in cms))
+
+
+def _resolve_backend(backend: str, fleet: FleetConfig, policy, classes):
+    """Map backend="numpy"|"jax"|"auto" to ("numpy", None) or
+    ("jax", kernel). "auto" prefers the compiled path and silently falls
+    back to numpy for policies with no kernel (custom Python subclasses);
+    an explicit "jax" raises instead of silently changing semantics."""
+    if backend not in ("numpy", "jax", "auto"):
+        raise ValueError(f"unknown backend {backend!r}; "
+                         "expected 'numpy', 'jax' or 'auto'")
+    if backend == "numpy":
+        return "numpy", None
+    from repro.fleet import jaxsim
+    if not jaxsim.available():
+        if backend == "jax":
+            raise ValueError("backend='jax' requires jax to be installed "
+                             "(use backend='auto' to fall back to numpy)")
+        return "numpy", None
+    kernel = policy.kernel(fleet, classes) \
+        if hasattr(policy, "kernel") else None
+    if kernel is None:
+        if backend == "jax":
+            raise ValueError(
+                f"backend='jax': policy {getattr(policy, 'name', policy)!r} "
+                "has no compiled kernel (custom Python policies run on the "
+                "numpy reference path; use backend='auto' to fall back)")
+        return "numpy", None
+    return "jax", kernel
+
+
 def simulate_fleet(workload, fleet: FleetConfig, policy, *,
                    slo_s: float = None, max_queue: float = None,
                    discipline="fifo", cold_start_seed: int = 0,
-                   seed_indices=None) -> SimResult:
+                   seed_indices=None, backend: str = "numpy",
+                   cold_start_delays=None) -> SimResult:
     """Run ``policy`` against a ``Workload`` (or bare ``Trace``) on a
     heterogeneous ``fleet``.
 
@@ -257,6 +380,16 @@ def simulate_fleet(workload, fleet: FleetConfig, policy, *,
     *slice* of a workload reproduces exactly the draws the full workload
     would give those rows — ``seed_indices`` (default ``arange(n_seeds)``)
     names the absolute indices of the rows being simulated.
+    ``cold_start_delays`` (optional) supplies that (n_seeds, n_bins,
+    n_pools) jitter tensor pre-drawn (``draw_cold_start_delays``), so a
+    tuning round stops re-drawing identical values per candidate.
+
+    ``backend`` selects the implementation: ``"numpy"`` (the reference
+    Python loop), ``"jax"`` (the compiled ``lax.scan`` path,
+    ``repro.fleet.jaxsim`` — requires the policy family to have a functional
+    kernel), or ``"auto"`` (compiled when possible, numpy otherwise). Both
+    backends produce the same ``SimResult`` up to float rounding; the exact
+    per-request latency accounting is shared.
     """
     if isinstance(workload, Trace):
         if slo_s is None:
@@ -282,39 +415,25 @@ def simulate_fleet(workload, fleet: FleetConfig, policy, *,
     order = fleet.drain_order()
     S, T = trace.arrivals.shape
     dt = trace.dt_s
-    cold_bins = [max(int(round(p.cold_start_mean_s / dt)), 0) for p in pools]
-    # lognormal jitter: sigma^2 = ln(1 + jitter^2) keeps the sampled mean at
-    # exactly cold_start_mean_s; pend/scan slack covers the ~99.9th-percentile
-    # delay (longer draws are clipped there)
-    cs_sigma = [np.sqrt(np.log1p(p.cold_start_jitter ** 2)) for p in pools]
-    cs_mu = [np.log(max(p.cold_start_mean_s, _EPS)) - sg * sg / 2
-             for p, sg in zip(pools, cs_sigma)]
-    scan_bins = [cb if p.cold_start_jitter == 0 or p.cold_start_mean_s == 0
-                 else max(int(np.ceil(np.exp(m + 3.1 * sg) / dt)), cb, 1)
-                 for p, cb, m, sg in zip(pools, cold_bins, cs_mu, cs_sigma)]
-    jittered = [p.cold_start_jitter > 0 and p.cold_start_mean_s > 0
-                for p in pools]
+    cold_bins, scan_bins, jittered, _, _ = _cold_start_plan(pools, dt)
     max_cb = max(scan_bins)
     seed_ids = (np.arange(S) if seed_indices is None
                 else np.asarray(seed_indices, int))
     if len(seed_ids) != S:
         raise ValueError(f"seed_indices names {len(seed_ids)} rows for "
                          f"a {S}-seed workload")
-    cs_delay = None
-    if any(jittered):
-        # pre-draw every (seed row, bin, jittered pool) spin-up delay, one
-        # substream per (cold_start_seed, absolute seed, pool): the draws a
-        # row sees depend only on its absolute identity, never on which
-        # slice of the workload it is simulated in or on the policy — the
-        # paired-replicate property candidate tuning relies on
-        cs_delay = np.zeros((S, T, P))
-        for p in range(P):
-            if not jittered[p]:
-                continue
-            for i, g in enumerate(seed_ids):
-                row_rng = np.random.default_rng((cold_start_seed, int(g), p))
-                cs_delay[i, :, p] = row_rng.lognormal(cs_mu[p], cs_sigma[p],
-                                                      size=T)
+    if cold_start_delays is not None:
+        cs_delay = np.asarray(cold_start_delays, float)
+        if cs_delay.shape != (S, T, P):
+            raise ValueError(f"cold_start_delays shape {cs_delay.shape} != "
+                             f"{(S, T, P)}")
+    else:
+        cs_delay = draw_cold_start_delays(pools, S, T, dt, cold_start_seed,
+                                          seed_ids)
+    backend, kernel = _resolve_backend(backend, fleet, policy, classes)
+    if backend == "jax":
+        return _simulate_fleet_jax(workload, fleet, policy, kernel, disc,
+                                   order, slos, max_queue, cs_delay)
     svc_terms = [(p.service.t_fixed, p.service.t_per_unit,
                   float(p.service.max_batch)) for p in pools]
 
@@ -442,43 +561,92 @@ def simulate_fleet(workload, fleet: FleetConfig, policy, *,
         rec["billed"][:, t] = pool_billed[:, t, :].sum(axis=1)
         rec["util"][:, t] = obs.utilization
 
-    # exact per-request latency from the cohort model, class by class: slots
-    # are (bin, drain-rank) pairs, time-ordered, matching how the queue head
-    # was assigned; within a class every discipline serves FIFO, so the
-    # per-class cumulative served counts recover exact sojourns
-    slot_bin = np.repeat(np.arange(T), P)
-    flat_bt = slot_bt.reshape(S, T * P)
-    cms = multiclass_cohort_metrics(cls["admitted"], slot_class, slot_bin,
-                                    flat_bt, dt, slos)
-    class_ok = np.stack([cm.ok_served.reshape(S, T, P).sum(axis=2)
-                         for cm in cms], axis=2)
-    class_served = slot_class.reshape(S, T, P, C).sum(axis=2)
-    # per-bin mean sojourn pooled over classes and drain ranks
-    mass_soj = sum((cm.mean_sojourn * slot_class[:, :, c]).reshape(S, T, P)
-                   .sum(axis=2) for c, cm in enumerate(cms))
-    served_all = rec["served"]
-    lat = np.divide(mass_soj, served_all,
-                    out=np.zeros((S, T)), where=served_all > 0)
-    # slots are drain-rank-ordered; report per-pool served in pool order
-    rank_of = np.argsort(np.asarray(order))
+    return _assemble_result(workload, fleet, disc, policy.name, order, slos,
+                            admitted, cls, rec, pool_rep, pool_billed,
+                            slot_served, slot_class, slot_bt)
 
-    return SimResult(
-        trace=trace, fleet=fleet, policy_name=policy.name,
-        slo_s=float(slos.min()),
-        arrivals=trace.arrivals.astype(float), admitted=admitted,
-        served=served_all, dropped=rec["dropped"], queue=rec["queue"],
-        replicas=rec["replicas"], billed_replicas=rec["billed"],
-        latency_s=lat, ok_served=class_ok.sum(axis=2),
-        utilization=rec["util"], pool_replicas=pool_rep,
-        pool_billed=pool_billed, pool_served=slot_served[:, :, rank_of],
-        sojourn_values=np.concatenate([cm.sojourn_values for cm in cms]),
-        sojourn_weights=np.concatenate([cm.sojourn_weights for cm in cms]),
-        workload=workload, discipline=disc.name,
-        class_admitted=cls["admitted"], class_served=class_served,
-        class_dropped=cls["dropped"], class_queue=cls["queue"],
-        class_ok=class_ok,
-        class_sojourns=tuple((cm.sojourn_values, cm.sojourn_weights)
-                             for cm in cms))
+
+def _dynamics_inputs(workload, fleet: FleetConfig, order, cs_delay):
+    """Shared (candidate-independent) array inputs of the compiled backend:
+    per-class arrivals, per-(seed, bin, pool) launch-landing offsets, and
+    service terms. Launch offsets fold the jitter discretization
+    (``clip(rint(delay / dt), 0, scan_bins)``) so the scan step is pure
+    arithmetic."""
+    pools = fleet.pools
+    trace = workload.total_trace()
+    S, T = trace.arrivals.shape
+    P = len(pools)
+    dt = trace.dt_s
+    cold_bins, scan_bins, jittered, _, _ = _cold_start_plan(pools, dt)
+    jb = np.empty((S, T, P), np.int32)
+    for p in range(P):
+        if jittered[p] and cs_delay is not None:
+            jb[:, :, p] = np.clip(np.rint(cs_delay[:, :, p] / dt).astype(int),
+                                  0, scan_bins[p])
+        else:
+            jb[:, :, p] = cold_bins[p]
+    return dict(
+        arrivals=workload.arrivals.astype(float), jb=jb, dt=dt,
+        order=order,
+        t_fixed=[p.service.t_fixed for p in pools],
+        t_unit=[p.service.t_per_unit for p in pools],
+        max_b=[float(p.service.max_batch) for p in pools],
+        max_cold_bins=max(scan_bins))
+
+
+def _candidate_arrays(fleet: FleetConfig, order, rate0: float):
+    """Per-candidate quota bounds and initial fleet for the compiled
+    backend (quota dims make these differ across tuning candidates)."""
+    pools = fleet.pools
+    min_rep = np.array([p.min_replicas for p in pools], float)
+    max_rep = np.array([p.max_replicas for p in pools], float)
+    init_ready = np.array([_initial_replicas(pc, rate0, p == order[0])
+                           for p, pc in enumerate(pools)], float)
+    return min_rep, max_rep, init_ready
+
+
+def _result_from_dynamics(workload, fleet: FleetConfig, disc, policy_name,
+                          order, slos, out) -> SimResult:
+    """Build a SimResult from one candidate's compiled-dynamics outputs
+    (arrays with leading dims (S, T))."""
+    S, T, C = out["admitted_c"].shape
+    P = fleet.n_pools
+    cls = {"admitted": out["admitted_c"], "dropped": out["dropped_c"],
+           "queue": out["queue_c"]}
+    rec = {"served": out["slot_served"].sum(axis=2),
+           "dropped": out["dropped_c"].sum(axis=2),
+           "queue": out["queue_c"].sum(axis=2),
+           "replicas": out["pool_rep"].sum(axis=2),
+           "billed": out["billed"].sum(axis=2),
+           "util": out["util"]}
+    return _assemble_result(
+        workload, fleet, disc, policy_name, order, slos,
+        out["admitted_c"].sum(axis=2), cls, rec, out["pool_rep"],
+        out["billed"], out["slot_served"],
+        out["slot_split"].reshape(S, T * P, C), out["slot_bt"])
+
+
+def _simulate_fleet_jax(workload, fleet: FleetConfig, policy, kernel, disc,
+                        order, slos, max_queue, cs_delay) -> SimResult:
+    """One policy on the compiled backend: the same batched core the tuner
+    uses, with a single candidate."""
+    from repro.fleet import jaxsim
+    from repro.fleet.discipline import cohort_tables
+
+    trace = workload.total_trace()
+    T = trace.arrivals.shape[1]
+    tables = cohort_tables(disc, workload.classes, T, trace.dt_s)
+    min_rep, max_rep, init_ready = _candidate_arrays(fleet, order,
+                                                     trace.rate[0])
+    out = jaxsim.run_dynamics(
+        kernel, **_dynamics_inputs(workload, fleet, order, cs_delay),
+        max_queue=max_queue,
+        tables={k: v[None] for k, v in tables.items()},
+        kp={k: np.asarray([v]) for k, v in kernel.params_of(policy).items()},
+        min_rep=min_rep[None], max_rep=max_rep[None],
+        init_ready=init_ready[None])
+    return _result_from_dynamics(workload, fleet, disc, policy.name, order,
+                                 slos, {k: v[0] for k, v in out.items()})
 
 
 def simulate(workload, service: ServiceModel, policy, *,
@@ -486,7 +654,7 @@ def simulate(workload, service: ServiceModel, policy, *,
              max_queue: float = None, initial_replicas: int = None,
              min_replicas: int = 0, max_replicas: int = 1024,
              discipline="fifo", cold_start_seed: int = 0,
-             seed_indices=None) -> SimResult:
+             seed_indices=None, backend: str = "numpy") -> SimResult:
     """Homogeneous fleet: run ``policy`` against a ``Trace`` or ``Workload``
     on replicas of ``service``. A thin wrapper over ``simulate_fleet`` with
     one pool. ``cold_start_s`` accepts the same constant-or-(mean, jitter)
@@ -499,4 +667,4 @@ def simulate(workload, service: ServiceModel, policy, *,
     return simulate_fleet(workload, FleetConfig((pool,), max_queue=max_queue),
                           policy, slo_s=slo_s, discipline=discipline,
                           cold_start_seed=cold_start_seed,
-                          seed_indices=seed_indices)
+                          seed_indices=seed_indices, backend=backend)

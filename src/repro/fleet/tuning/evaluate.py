@@ -22,7 +22,8 @@ import numpy as np
 
 from repro.core.cost_model import dollar_cost
 from repro.fleet.report import weighted_percentile
-from repro.fleet.simulator import FleetConfig, SimResult, simulate_fleet
+from repro.fleet.simulator import (FleetConfig, SimResult,
+                                   draw_cold_start_delays, simulate_fleet)
 from repro.fleet.traces import Trace
 from repro.fleet.workload import Workload
 
@@ -127,6 +128,10 @@ class TuningScenario:
       candidates are built with ``policy_cls.from_params(params, **context)``.
     * ``discipline``/``max_queue``/``cold_start_seed`` — simulation fixtures
       (a ``discipline`` dim in the space overrides the fixture).
+    * ``backend`` — the simulator implementation candidates are scored on:
+      ``"numpy"`` (reference), ``"jax"`` (compiled; a whole racing round is
+      one jitted candidate x seed batch), or ``"auto"`` (compiled when the
+      policy family has a kernel, numpy otherwise).
     """
     name: str
     workload: Workload
@@ -137,6 +142,7 @@ class TuningScenario:
     max_queue: Optional[float] = None
     cold_start_seed: int = 0
     build_policy: Callable = None    # override: params -> Policy
+    backend: str = "numpy"
 
     def __post_init__(self):
         if isinstance(self.workload, Trace):
@@ -145,10 +151,41 @@ class TuningScenario:
                 raise ValueError("a bare Trace workload needs context"
                                  "['slo_s'] for its request class")
             self.workload = Workload.from_trace(self.workload, float(slo))
+        self._cs_delay = False       # lazy cold-start jitter tensor cache
+        self._tables = {}            # per-discipline cohort_tables cache
+        self._batch_windows = None   # sticky kernel ring-buffer sizes
 
     @property
     def n_seeds(self) -> int:
         return self.workload.n_seeds
+
+    def cold_start_delays(self):
+        """The (n_seeds, n_bins, n_pools) spin-up jitter tensor, drawn ONCE
+        per scenario and sliced per racing round — every candidate sees
+        identical draws anyway (they are keyed by absolute seed identity),
+        so re-drawing them per ``simulate_fleet`` call was pure per-candidate
+        RNG overhead. ``None`` when no pool jitters."""
+        if self._cs_delay is False:
+            self._cs_delay = draw_cold_start_delays(
+                self.fleet.pools, self.n_seeds, self.workload.n_bins,
+                self.workload.dt_s, self.cold_start_seed,
+                np.arange(self.n_seeds))
+        return self._cs_delay
+
+    def _cs_rows(self, s0: int, s1: int):
+        cs = self.cold_start_delays()
+        return None if cs is None else cs[s0:s1]
+
+    def cohort_tables_for(self, discipline):
+        """Cached static serve-order tables for the compiled backend."""
+        from repro.fleet.discipline import cohort_tables
+        key = discipline if isinstance(discipline, str) else id(discipline)
+        tabs = self._tables.get(key)
+        if tabs is None:
+            tabs = cohort_tables(discipline, self.workload.classes,
+                                 self.workload.n_bins, self.workload.dt_s)
+            self._tables[key] = tabs
+        return tabs
 
     def split_params(self, params: dict):
         """(policy_params, discipline, fleet) for one candidate — the
@@ -178,17 +215,21 @@ class TuningScenario:
             ctx["fleet"] = fleet
         return self.policy_cls.from_params(policy_params, **ctx)
 
-    def simulate(self, params: dict, s0: int, s1: int) -> SimResult:
+    def simulate(self, params: dict, s0: int, s1: int,
+                 backend: str = None) -> SimResult:
         """Run one candidate against the shared seed slice [s0, s1).
         ``seed_indices`` pins each row's cold-start jitter substream to its
         absolute replicate id, so racing's incremental slices see exactly
-        the draws a single full-budget evaluation would."""
+        the draws a single full-budget evaluation would (the scenario hands
+        the pre-drawn tensor rows straight to the simulator)."""
         _, discipline, fleet = self.split_params(params)
         return simulate_fleet(
             _slice_workload(self.workload, s0, s1), fleet,
             self.make_policy(params), discipline=discipline,
             max_queue=self.max_queue, cold_start_seed=self.cold_start_seed,
-            seed_indices=np.arange(s0, s1))
+            seed_indices=np.arange(s0, s1),
+            cold_start_delays=self._cs_rows(s0, s1),
+            backend=self.backend if backend is None else backend)
 
 
 def per_seed_metrics(sim: SimResult):
@@ -216,23 +257,134 @@ def per_seed_metrics(sim: SimResult):
     return cost_hr, worst_att, drop
 
 
+def _eval_from_sim(params: dict, sim: SimResult,
+                   objective: Objective) -> CandidateEval:
+    cost_hr, att, drop = per_seed_metrics(sim)
+    return CandidateEval(
+        params=dict(params), cost_usd_hr=cost_hr, attainment=att,
+        drop_rate=drop, score=np.asarray(objective.score(cost_hr, att)),
+        sojourns=[(sim.sojourn_values, sim.sojourn_weights)])
+
+
+def _evaluate_batched(scenario: TuningScenario, candidates: list,
+                      objective: Objective, s0: int, s1: int):
+    """Score the whole candidate slate in ONE jitted dispatch: stack every
+    candidate's kernel params, discipline tables and quota bounds, run the
+    compiled candidate x seed lattice, then finish each candidate's exact
+    latency accounting on the host. Returns ``None`` when the slate cannot
+    batch (no jax, custom ``build_policy``, a family without a kernel)."""
+    from repro.fleet import jaxsim
+    if not jaxsim.available() or scenario.build_policy is not None:
+        return None
+    from repro.fleet.discipline import get_discipline
+    from repro.fleet.simulator import (_candidate_arrays, _dynamics_inputs,
+                                       _result_from_dynamics)
+
+    wl = _slice_workload(scenario.workload, s0, s1)
+    policies, discs, fleets = [], [], []
+    for params in candidates:
+        _, disc, fleet = scenario.split_params(params)
+        policies.append(scenario.make_policy(params))
+        discs.append(disc)
+        fleets.append(fleet)
+    # same contract as simulate_fleet: a single-target policy cannot drive a
+    # multi-pool fleet (broadcasting its target across pools would score a
+    # semantically meaningless config instead of failing)
+    P = fleets[0].n_pools
+    if P > 1 and not getattr(policies[0], "per_pool", False):
+        raise ValueError(f"policy {policies[0].name!r} returns a single "
+                         f"target; a {P}-pool fleet needs a per-pool policy "
+                         "(e.g. HeterogeneousPredictivePolicy)")
+
+    # ring-buffer sizes must be static across the batch AND sticky across
+    # racing rounds (a shrinking round must reuse the compiled program)
+    windows = [int(p.forecaster.window_bins) for p in policies
+               if hasattr(p, "forecaster")]
+    sustains = [int(p.sustain.window_bins) for p in policies
+                if hasattr(p, "sustain")]
+    prev = scenario._batch_windows or (0, 0)
+    W = max([prev[0]] + windows) or None
+    Ws = max([prev[1]] + sustains) or None
+    scenario._batch_windows = (W or 0, Ws or 0)
+
+    template = fleets[0]
+    if not hasattr(policies[0], "kernel"):
+        return None
+    kernel = policies[0].kernel(template, wl.classes,
+                                max_window=W, max_sustain=Ws)
+    if kernel is None:
+        return None
+    kp_rows = []
+    for pol, fleet in zip(policies, fleets):
+        k = pol.kernel(fleet, wl.classes, max_window=W, max_sustain=Ws)
+        if k is not kernel:         # mixed families/configs cannot batch
+            return None
+        kp_rows.append(kernel.params_of(pol))
+
+    order = template.drain_order()
+    tables = [scenario.cohort_tables_for(d) for d in discs]
+    rate0 = wl.total_trace().rate[0]
+    bounds = [_candidate_arrays(f, order, rate0) for f in fleets]
+    max_queue = (template.max_queue if scenario.max_queue is None
+                 else scenario.max_queue)
+    out = jaxsim.run_dynamics(
+        kernel, **_dynamics_inputs(wl, template, order,
+                                   scenario._cs_rows(s0, s1)),
+        max_queue=max_queue,
+        tables={k: np.stack([t[k] for t in tables])
+                for k in ("cnt", "cls_of_rank", "drop_rank")},
+        kp={k: np.array([r[k] for r in kp_rows])
+            for k in kernel.param_names},
+        min_rep=np.stack([b[0] for b in bounds]),
+        max_rep=np.stack([b[1] for b in bounds]),
+        init_ready=np.stack([b[2] for b in bounds]))
+    slos = wl.slos()
+    evals = []
+    for i, params in enumerate(candidates):
+        sim = _result_from_dynamics(
+            wl, fleets[i], get_discipline(discs[i]), policies[i].name,
+            order, slos, {k: v[i] for k, v in out.items()})
+        evals.append(_eval_from_sim(params, sim, objective))
+    return evals
+
+
 def evaluate_candidates(scenario: TuningScenario, candidates: list,
                         objective: Objective, s0: int = 0,
-                        s1: int = None) -> list:
-    """Score every candidate on the shared seed slice [s0, s1). One
-    ``simulate_fleet`` call per candidate covers the whole slice (the
-    simulator is seed-vectorized); identical slices across candidates give
-    the paired comparison racing relies on."""
+                        s1: int = None, backend: str = None) -> list:
+    """Score every candidate on the shared seed slice [s0, s1); identical
+    slices across candidates give the paired comparison racing relies on.
+
+    On the numpy backend, one seed-vectorized ``simulate_fleet`` call per
+    candidate covers the whole slice. On the jax backend the entire
+    candidate slate is scored in one jitted candidate x seed dispatch
+    (``_evaluate_batched``); ``"auto"`` batches when the policy family has a
+    compiled kernel and falls back to the numpy loop otherwise. ``backend``
+    overrides the scenario's own setting."""
     s1 = scenario.n_seeds if s1 is None else s1
     if not 0 <= s0 < s1 <= scenario.n_seeds:
         raise ValueError(f"bad seed slice [{s0}, {s1}) for "
                          f"{scenario.n_seeds} replicates")
+    if not candidates:
+        return []
+    backend = scenario.backend if backend is None else backend
+    if backend not in ("numpy", "jax", "auto"):
+        raise ValueError(f"unknown backend {backend!r}; "
+                         "expected 'numpy', 'jax' or 'auto'")
+    if backend != "numpy":
+        evals = _evaluate_batched(scenario, candidates, objective, s0, s1)
+        if evals is not None:
+            return evals
+        if backend == "jax":
+            from repro.fleet import jaxsim
+            if not jaxsim.available():
+                raise ValueError("backend='jax' requires jax to be installed "
+                                 "(use backend='auto' to fall back to numpy)")
+            raise ValueError(
+                "backend='jax': this scenario cannot batch (custom "
+                "build_policy or a policy family without a compiled "
+                "kernel); use backend='auto' to fall back to numpy")
     out = []
     for params in candidates:
-        sim = scenario.simulate(params, s0, s1)
-        cost_hr, att, drop = per_seed_metrics(sim)
-        out.append(CandidateEval(
-            params=dict(params), cost_usd_hr=cost_hr, attainment=att,
-            drop_rate=drop, score=np.asarray(objective.score(cost_hr, att)),
-            sojourns=[(sim.sojourn_values, sim.sojourn_weights)]))
+        sim = scenario.simulate(params, s0, s1, backend="numpy")
+        out.append(_eval_from_sim(params, sim, objective))
     return out

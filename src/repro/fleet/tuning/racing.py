@@ -6,7 +6,9 @@ Racing spends the budget where the decision is actually close:
 
 * rounds double the replicate count (seed slices are *shared* across
   candidates, so per-seed score differences vs the incumbent are paired —
-  ``evaluate.py``'s common-random-numbers setup);
+  ``evaluate.py``'s common-random-numbers setup; on the jax backend each
+  round's surviving slate is scored as ONE compiled candidate x seed batch,
+  with ``sims_used`` accounting unchanged);
 * a candidate is culled early when the sequential log-likelihood ratio of its
   paired score deficit vs the incumbent crosses the Wald threshold
   ``ln((1-beta)/alpha)`` — the same two-hypothesis sequential test

@@ -47,8 +47,8 @@ class TuningBudget:
 def tuning_scenario(scenario, workload, policy_cls, *, shape_name: str = None,
                     fleet: FleetConfig = None, cold_start_s=60.0,
                     max_queue: float = None, discipline: str = "fifo",
-                    cold_start_seed: int = 0, name: str = None
-                    ) -> TuningScenario:
+                    cold_start_seed: int = 0, name: str = None,
+                    backend: str = "numpy") -> TuningScenario:
     """Build a ``TuningScenario`` from a fleet ``Scenario`` (scoping rows).
 
     Single-pool by default: the pool's shape is ``shape_name`` or the
@@ -56,7 +56,9 @@ def tuning_scenario(scenario, workload, policy_cls, *, shape_name: str = None,
     and the policy context's rows are restricted to that shape so predictive
     candidates size against the pool they actually run on. Pass ``fleet``
     for heterogeneous tuning (e.g. ``HeterogeneousPredictivePolicy`` with
-    ``quota:*`` dims).
+    ``quota:*`` dims). ``backend`` picks the simulator implementation
+    candidates are scored on ("numpy" reference loop, "jax" compiled
+    batched, "auto").
     """
     if fleet is None:
         if shape_name is None:
@@ -76,7 +78,7 @@ def tuning_scenario(scenario, workload, policy_cls, *, shape_name: str = None,
         name=name or f"{scenario.name}/{getattr(workload, 'name', 'trace')}",
         workload=workload, fleet=fleet, policy_cls=policy_cls,
         context=context, discipline=discipline, max_queue=max_queue,
-        cold_start_seed=cold_start_seed)
+        cold_start_seed=cold_start_seed, backend=backend)
 
 
 def _fit_surface(space, evals, min_rounds: int = 2):

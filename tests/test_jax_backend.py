@@ -1,0 +1,321 @@
+"""Compiled (JAX) simulator backend: bin-by-bin equivalence with the numpy
+reference across scenarios/disciplines/policy families, batched candidate
+evaluation == the sequential loop, racing/tune() winner parity, cold-start
+tensor hoisting, and the auto/jax fallback contract."""
+import numpy as np
+import pytest
+
+from repro.core import CellResult, RooflineTerms, get_shape
+from repro.fleet import (FleetConfig, HeterogeneousPredictivePolicy,
+                         Objective, ParamSpace, PolicyKernel, PoolConfig,
+                         PredictivePolicy, QueueProportionalPolicy,
+                         ReactivePolicy, StaticPolicy, TuningBudget,
+                         TuningScenario, discipline_dim, evaluate_candidates,
+                         flash_crowd_trace, make_kernel, mset_scenario,
+                         poisson_trace, quota_dims, race, simulate,
+                         simulate_fleet, tiered_sla_workload, tune,
+                         tuning_scenario)
+from repro.fleet.simulator import draw_cold_start_delays
+
+jax = pytest.importorskip("jax")
+
+# bin-by-bin SimResult fields both backends must agree on
+TRACE_FIELDS = ("served", "queue", "billed_replicas", "latency_s",
+                "ok_served", "utilization", "dropped", "admitted",
+                "replicas", "pool_billed", "pool_served", "pool_replicas",
+                "class_ok", "class_queue", "class_served", "class_admitted",
+                "class_dropped")
+
+
+def _cell(shape="v5e-4", t_comp=0.4, t_mem=0.1, t_coll=0.05, batch=64):
+    return CellResult(params={"batch": batch,
+                              "chips": get_shape(shape).chips},
+                      shape_name=shape,
+                      terms=RooflineTerms(t_comp, t_mem, t_coll),
+                      analysis={"peak_memory_per_device": 1e9})
+
+
+def _service(**kw):
+    from repro.fleet import service_model_from_cell
+    return service_model_from_cell(_cell(**kw),
+                                   units_per_step=kw.get("batch", 64))
+
+
+def _assert_equivalent(a, b, atol=1e-8):
+    for k in TRACE_FIELDS:
+        np.testing.assert_allclose(getattr(a, k), getattr(b, k), atol=atol,
+                                   rtol=1e-9, err_msg=f"field {k!r}")
+    # the pooled exact sojourn distributions agree (as distributions)
+    from repro.fleet import weighted_percentile
+    assert a.sojourn_weights.sum() == pytest.approx(b.sojourn_weights.sum())
+    for q in (50, 90, 99):
+        assert weighted_percentile(a.sojourn_values, a.sojourn_weights, q) \
+            == pytest.approx(weighted_percentile(b.sojourn_values,
+                                                 b.sojourn_weights, q),
+                             abs=1e-9)
+    assert a.discipline == b.discipline
+    assert a.policy_name == b.policy_name
+
+
+# ----------------------- golden scenario equivalence ------------------------
+
+def test_flash_crowd_queue_prop_matches_numpy():
+    svc = _service()
+    tr = flash_crowd_trace(5 * svc.max_throughput, 900.0, dt_s=5.0,
+                           n_seeds=4, seed=0)
+    kw = dict(slo_s=2.0, cold_start_s=60.0)
+    a = simulate(tr, svc, QueueProportionalPolicy(), **kw)
+    b = simulate(tr, svc, QueueProportionalPolicy(), backend="jax", **kw)
+    _assert_equivalent(a, b)
+
+
+def test_tiered_sla_all_disciplines_match_numpy():
+    scn = mset_scenario(n_signals=256, n_memvec=512, fleet=1, slo_s=1.0)
+    svc = scn.service_for(scn.cheapest_shape())
+    wl = tiered_sla_workload(3.0 * svc.max_throughput, 1500.0, dt_s=5.0,
+                             n_seeds=3, seed=0)
+    for disc in ("fifo", "priority", "edf"):
+        a = simulate(wl, svc, StaticPolicy(8), cold_start_s=30.0,
+                     discipline=disc)
+        b = simulate(wl, svc, StaticPolicy(8), cold_start_s=30.0,
+                     discipline=disc, backend="jax")
+        _assert_equivalent(a, b)
+
+
+def test_hetero_fleet_jittered_cold_start_matches_numpy():
+    scn = mset_scenario(n_signals=256, n_memvec=512, fleet=1, slo_s=1.0)
+    svc = scn.service_for(scn.cheapest_shape())
+    fleet = scn.fleet_for(["v5e-4", "v5e-16"], cold_start_s=(45.0, 0.5),
+                          max_replicas=16)
+    from repro.fleet import interactive_batch_workload
+    wl = interactive_batch_workload(4.0 * svc.max_throughput, 1500.0,
+                                    dt_s=5.0, n_seeds=3, seed=1)
+
+    def pol():
+        return HeterogeneousPredictivePolicy(
+            scn.rows, scn.constraint(), scn.units_per_step, fleet)
+
+    a = simulate_fleet(wl, fleet, pol(), discipline="edf", cold_start_seed=3)
+    b = simulate_fleet(wl, fleet, pol(), discipline="edf", cold_start_seed=3,
+                       backend="jax")
+    _assert_equivalent(a, b)
+
+
+def test_predictive_and_admission_control_match_numpy():
+    scn = mset_scenario(n_signals=256, n_memvec=512, fleet=1, slo_s=1.0)
+    svc = scn.service_for(scn.cheapest_shape())
+    tr = flash_crowd_trace(3.5 * svc.max_throughput, 1500.0, dt_s=5.0,
+                           peak_mult=4.0, n_seeds=3, seed=2)
+    pol = PredictivePolicy(scn.rows, scn.constraint(), scn.units_per_step,
+                           horizon_s=120.0)
+    a = simulate(tr, svc, pol, slo_s=1.0, cold_start_s=60.0,
+                 max_queue=4000.0)
+    pol2 = PredictivePolicy(scn.rows, scn.constraint(), scn.units_per_step,
+                            horizon_s=120.0)
+    b = simulate(tr, svc, pol2, slo_s=1.0, cold_start_s=60.0,
+                 max_queue=4000.0, backend="jax")
+    _assert_equivalent(a, b)
+
+
+# ----------------------- hypothesis property --------------------------------
+
+def test_backends_agree_property():
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    svc = _service()
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=1000),
+           disc=st.sampled_from(["fifo", "priority", "edf"]),
+           jitter=st.floats(min_value=0.0, max_value=0.8),
+           rate_mult=st.floats(min_value=1.0, max_value=6.0),
+           drain_s=st.floats(min_value=5.0, max_value=90.0),
+           headroom=st.floats(min_value=0.6, max_value=0.95))
+    def prop(seed, disc, jitter, rate_mult, drain_s, headroom):
+        # fixed shapes (T, C, P) so the compiled program is traced once;
+        # everything else — rates, discipline tables, jitter, knobs — is data
+        wl = tiered_sla_workload(rate_mult * svc.max_throughput, 600.0,
+                                 dt_s=5.0, n_seeds=3, seed=seed)
+        pol = QueueProportionalPolicy(drain_s=drain_s, headroom=headroom)
+        kw = dict(cold_start_s=(30.0, jitter), discipline=disc,
+                  cold_start_seed=seed)
+        a = simulate(wl, svc, QueueProportionalPolicy(drain_s, headroom),
+                     **kw)
+        b = simulate(wl, svc, pol, backend="jax", **kw)
+        # aggregate per-seed metrics agree within float tolerance
+        from repro.fleet.tuning.evaluate import per_seed_metrics
+        ca, aa, da = per_seed_metrics(a)
+        cb, ab, db = per_seed_metrics(b)
+        np.testing.assert_allclose(ca, cb, rtol=1e-9, atol=1e-9)
+        np.testing.assert_allclose(aa, ab, rtol=1e-9, atol=1e-9)
+        np.testing.assert_allclose(da, db, rtol=1e-9, atol=1e-9)
+        for q in (50, 99):
+            from repro.fleet import weighted_percentile
+            pa = weighted_percentile(a.sojourn_values, a.sojourn_weights, q)
+            pb = weighted_percentile(b.sojourn_values, b.sojourn_weights, q)
+            assert pa == pytest.approx(pb, abs=1e-9)
+
+    prop()
+
+
+# ----------------------- batched candidate evaluation -----------------------
+
+def _flash_scenario(n_seeds=8, backend="numpy"):
+    scn = mset_scenario(n_signals=256, n_memvec=512, fleet=1, slo_s=1.0)
+    svc = scn.service_for(scn.cheapest_shape())
+    tr = flash_crowd_trace(3.5 * svc.max_throughput, 1500.0, dt_s=5.0,
+                           peak_mult=4.0, burst_width_s=60.0,
+                           n_seeds=n_seeds, seed=2)
+    return tuning_scenario(scn, tr, PredictivePolicy, cold_start_s=30.0,
+                           backend=backend)
+
+
+def test_batched_round_equals_sequential_loop():
+    ts = _flash_scenario()
+    obj = Objective(min_attainment=1.0, penalty_usd_per_hour=1e5)
+    cands = PredictivePolicy.param_space().sample_lhs(6, seed=0)
+    seq = evaluate_candidates(ts, cands, obj, backend="numpy")
+    bat = evaluate_candidates(ts, cands, obj, backend="jax")
+    for a, b in zip(seq, bat):
+        assert a.params == b.params
+        np.testing.assert_allclose(a.score, b.score, rtol=1e-9, atol=1e-9)
+        np.testing.assert_allclose(a.cost_usd_hr, b.cost_usd_hr, rtol=1e-9)
+        np.testing.assert_allclose(a.attainment, b.attainment, atol=1e-9)
+        assert a.p99_s() == pytest.approx(b.p99_s(), abs=1e-9)
+
+
+def test_batched_cross_cutting_dims_equal_sequential():
+    scn = mset_scenario(n_signals=256, n_memvec=512, fleet=1, slo_s=1.0)
+    svc = scn.service_for(scn.cheapest_shape())
+    fleet = scn.fleet_for(["v5e-4", "v5e-16"], cold_start_s=(45.0, 0.4),
+                          max_replicas=16)
+    wl = tiered_sla_workload(3.0 * svc.max_throughput, 1200.0, dt_s=5.0,
+                             n_seeds=4, seed=0)
+    ts = tuning_scenario(scn, wl, HeterogeneousPredictivePolicy, fleet=fleet)
+    space = (HeterogeneousPredictivePolicy.param_space()
+             + ParamSpace((discipline_dim(),)) + quota_dims(fleet, hi=16))
+    cands = space.sample_lhs(5, seed=3)
+    obj = Objective(min_attainment=0.95)
+    seq = evaluate_candidates(ts, cands, obj, backend="numpy")
+    bat = evaluate_candidates(ts, cands, obj, backend="jax")
+    for a, b in zip(seq, bat):
+        np.testing.assert_allclose(a.score, b.score, rtol=1e-9, atol=1e-9)
+
+
+def test_tune_same_winner_and_budget_both_backends():
+    """The regression the compiled path must never introduce: racing on the
+    jax backend returns the numpy winner and spends the same sims_used."""
+    obj = Objective(min_attainment=1.0, penalty_usd_per_hour=1e5)
+    budget = TuningBudget(n_candidates=12)
+    space = PredictivePolicy.param_space()
+    reports = {}
+    for backend in ("numpy", "jax"):
+        rep = tune(_flash_scenario(backend=backend), space, obj, budget,
+                   seed=0, baseline={"horizon_s": 60.0, "window_bins": 12,
+                                     "headroom": 0.85})
+        reports[backend] = rep
+    a, b = reports["numpy"], reports["jax"]
+    assert a.winner.params == b.winner.params
+    assert a.sims_used == b.sims_used
+    np.testing.assert_allclose(a.winner.score, b.winner.score, rtol=1e-12)
+    assert a.dominates_baseline() == b.dominates_baseline()
+
+
+def test_batched_rejects_single_target_policy_on_multipool_fleet():
+    """The batched path must enforce simulate_fleet's contract, not silently
+    broadcast a single-pool target across pools."""
+    scn = mset_scenario(n_signals=256, n_memvec=512, fleet=1, slo_s=1.0)
+    svc = scn.service_for(scn.cheapest_shape())
+    tr = flash_crowd_trace(3.0 * svc.max_throughput, 600.0, dt_s=5.0,
+                           n_seeds=3, seed=1)
+    ts = tuning_scenario(scn, tr, PredictivePolicy,
+                         fleet=scn.fleet_for(["v5e-4", "v5e-16"]),
+                         backend="jax")
+    cands = PredictivePolicy.param_space().sample_lhs(2, seed=0)
+    with pytest.raises(ValueError, match="per-pool policy"):
+        evaluate_candidates(ts, cands, Objective())
+
+
+def test_race_sims_accounting_unchanged_on_jax():
+    ts = _flash_scenario(backend="jax")
+    obj = Objective(min_attainment=1.0, penalty_usd_per_hour=1e5)
+    grid = [{"horizon_s": h, "window_bins": 12, "headroom": 0.85}
+            for h in (20.0, 60.0, 180.0, 420.0)]
+    rr = race(ts, grid, obj, init_seeds=2)
+    assert rr.full_budget == len(grid) * ts.n_seeds
+    assert 0 < rr.sims_used <= rr.full_budget
+
+
+# ----------------------- cold-start tensor hoisting -------------------------
+
+def test_hoisted_cold_start_tensor_matches_per_call_draws():
+    svc = _service()
+    tr = flash_crowd_trace(5 * svc.max_throughput, 900.0, dt_s=5.0,
+                           n_seeds=6, seed=0)
+    pool = PoolConfig(service=svc, cold_start_s=(60.0, 0.7))
+    fleet = FleetConfig((pool,))
+    # the tensor the scenario hoists == what simulate_fleet draws internally
+    ts = TuningScenario(name="h", workload=tr, fleet=fleet,
+                        policy_cls=QueueProportionalPolicy,
+                        context={"slo_s": 2.0}, cold_start_seed=3)
+    cs = ts.cold_start_delays()
+    ref = draw_cold_start_delays(fleet.pools, 6, tr.n_bins, tr.dt_s, 3,
+                                 np.arange(6))
+    assert np.array_equal(cs, ref)
+    # a sliced evaluation reproduces a direct simulate_fleet byte for byte
+    sim_h = ts.simulate({"drain_s": 30.0, "headroom": 0.85}, 2, 5)
+    direct = simulate_fleet(
+        type(tr)(tr.name, tr.dt_s, tr.rate, tr.arrivals[2:5]), fleet,
+        QueueProportionalPolicy(30.0, 0.85), slo_s=2.0, cold_start_seed=3,
+        seed_indices=np.arange(2, 5))
+    assert np.array_equal(sim_h.billed_replicas, direct.billed_replicas)
+    assert np.array_equal(sim_h.served, direct.served)
+    # and it is drawn once: the cache object is reused
+    assert ts.cold_start_delays() is cs
+
+
+def test_unjittered_scenario_has_no_tensor():
+    svc = _service()
+    tr = poisson_trace(2 * svc.max_throughput, 300.0, dt_s=5.0, n_seeds=2)
+    ts = TuningScenario(name="n", workload=tr,
+                        fleet=FleetConfig((PoolConfig(service=svc),)),
+                        policy_cls=StaticPolicy, context={"slo_s": 2.0})
+    assert ts.cold_start_delays() is None
+    ev = evaluate_candidates(ts, [{"n_replicas": 4}], Objective())
+    assert ev[0].n_seeds == 2
+
+
+# ----------------------- backend contract -----------------------------------
+
+class _CustomPolicy(StaticPolicy):
+    """A user-defined subclass: no compiled kernel."""
+    name = "custom"
+
+
+def test_auto_falls_back_and_jax_raises_for_custom_policy():
+    svc = _service()
+    tr = poisson_trace(2 * svc.max_throughput, 300.0, dt_s=5.0, n_seeds=2)
+    a = simulate(tr, svc, _CustomPolicy(4), slo_s=2.0, backend="auto")
+    b = simulate(tr, svc, _CustomPolicy(4), slo_s=2.0, backend="numpy")
+    np.testing.assert_array_equal(a.served, b.served)
+    with pytest.raises(ValueError, match="no compiled kernel"):
+        simulate(tr, svc, _CustomPolicy(4), slo_s=2.0, backend="jax")
+    with pytest.raises(ValueError, match="backend"):
+        simulate(tr, svc, StaticPolicy(4), slo_s=2.0, backend="pallas")
+
+
+def test_auto_uses_kernel_for_builtin_families():
+    svc = _service()
+    fleet = FleetConfig((PoolConfig(service=svc),))
+    from repro.fleet.workload import RequestClass
+    classes = (RequestClass("default", 2.0),)
+    for pol in (StaticPolicy(4), ReactivePolicy(),
+                QueueProportionalPolicy()):
+        k = make_kernel(pol, fleet, classes)
+        assert isinstance(k, PolicyKernel)
+        # cached: same config returns the same object (a jit-cache key)
+        assert make_kernel(pol, fleet, classes) is k
+        params = k.params_of(pol)
+        assert set(params) == set(k.param_names)
+    assert make_kernel(_CustomPolicy(4), fleet, classes) is None

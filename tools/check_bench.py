@@ -26,12 +26,22 @@ Tuner gate (``benchmark == "controller_tuning"``):
   as the exhaustive grid sweep;
 * tuner wall clock stays within ``--wall-mult`` (2x) of the baseline.
 
+Simulator-backend gate (``benchmark == "sim_perf"``):
+
+* the compiled (JAX) batched candidate evaluation beats the sequential
+  numpy loop by >= 5x warm on the headline flash-crowd tuning round —
+  unless the JAX path is already under the absolute wall-clock grace floor
+  (both too fast to time meaningfully);
+* the backends agree: per-seed scores within tolerance, same winner.
+
 Usage (CI runs exactly this):
 
     python tools/check_bench.py BENCH_fleet.json \\
         --baseline benchmarks/baselines/fleet.json
     python tools/check_bench.py BENCH_tuner.json \\
         --baseline benchmarks/baselines/tuner.json
+    python tools/check_bench.py BENCH_sim.json \\
+        --baseline benchmarks/baselines/sim.json
 
 After an intentional perf/cost change, refresh the baseline with
 ``--write-baseline`` and commit the result.
@@ -187,6 +197,45 @@ def compare_tuner(fresh: dict, base: dict, attain_tol: float,
     return problems
 
 
+MIN_SIM_SPEEDUP = 5.0           # compiled path vs numpy loop (ISSUE 5)
+SIM_WALL_FLOOR_S = 0.5          # grace floor: below this the JAX wall clock
+#                                 is timing noise, not a regression signal
+SIM_SCORE_TOL = 1e-6            # backend-agreement bar on per-seed scores
+
+
+def compare_sim(fresh: dict, base: dict) -> list:
+    """Regression strings for a simulator-backend benchmark (empty=green).
+    The speedup bar is an invariant of the fresh run (machine-relative, so
+    no baseline arithmetic); the baseline pins which grid cells must keep
+    existing."""
+    problems = []
+    head = fresh.get("headline", {})
+    speedup = head.get("speedup")
+    jax_s = head.get("jax_warm_s")
+    if speedup is None or jax_s is None:
+        return [f"sim: headline missing (have {sorted(head)})"]
+    if speedup < MIN_SIM_SPEEDUP and jax_s > SIM_WALL_FLOOR_S:
+        problems.append(
+            f"sim: compiled path only {speedup:.1f}x the numpy loop on the "
+            f"headline round ({head.get('grid')}) — bar {MIN_SIM_SPEEDUP}x "
+            f"(jax {jax_s:.3f}s > {SIM_WALL_FLOOR_S}s grace floor)")
+    agree = fresh.get("agreement", {})
+    delta = agree.get("max_score_delta")
+    if delta is None or not delta <= SIM_SCORE_TOL:
+        problems.append(f"sim: backends disagree — max per-seed score delta "
+                        f"{delta} (tol {SIM_SCORE_TOL})")
+    if not agree.get("same_winner"):
+        problems.append("sim: backends disagree on the round winner")
+    fresh_cells = {(r["n_candidates"], r["n_seeds"], r["n_bins"])
+                   for r in fresh.get("records", [])}
+    for brec in base.get("records", []):
+        cell = (brec["n_candidates"], brec["n_seeds"], brec["n_bins"])
+        if cell not in fresh_cells:
+            problems.append(f"sim: missing grid cell {cell} "
+                            "(present in baseline)")
+    return problems
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="fail when benchmark results regress vs baseline")
@@ -226,6 +275,21 @@ def main(argv=None) -> int:
               f"fresh results {fresh.get('benchmark')!r} — wrong --baseline "
               "file?", file=sys.stderr)
         return 2
+
+    if fresh.get("benchmark") == "sim_perf":
+        problems = compare_sim(fresh, base)
+        if problems:
+            print(f"BENCH REGRESSION ({len(problems)} problem(s)):")
+            for p in problems:
+                print(f"  - {p}")
+            return 1
+        head = fresh["headline"]
+        print(f"sim gate green: compiled backend {head['speedup']:.1f}x the "
+              f"numpy loop on the {head['grid']} headline round "
+              f"(bar {MIN_SIM_SPEEDUP}x), backends agree "
+              f"(max score delta "
+              f"{fresh['agreement']['max_score_delta']:.2e})")
+        return 0
 
     if fresh.get("benchmark") == "controller_tuning":
         problems = compare_tuner(fresh, base, args.attain_tol, args.cost_tol,
