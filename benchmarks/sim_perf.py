@@ -16,6 +16,14 @@ The headline ``tools/check_bench.py`` gates (``BENCH_sim.json`` vs
 loop by at least 5x (with an absolute wall-clock grace floor for machines
 where both are too fast to time), and the backends must agree.
 
+The grid runs inside a telemetry session, so ``BENCH_sim.json`` also
+records the compiled backend's jit-cache hit rate and its
+compile-vs-dispatch seconds split, and the session's event log lands next
+to the JSON (``*_events.jsonl``, a CI artifact). A separate
+``telemetry_overhead`` section times the headline flash-crowd round with
+telemetry enabled vs disabled — ``check_bench.py`` gates the enabled run at
+<= 5% slower.
+
     PYTHONPATH=src python benchmarks/sim_perf.py [--full] [--out PATH]
 """
 from __future__ import annotations
@@ -31,7 +39,8 @@ import numpy as np
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
-from repro.fleet import Objective, PredictivePolicy, evaluate_candidates
+from repro.fleet import (Objective, PredictivePolicy, evaluate_candidates,
+                         telemetry)
 
 # the scenario IS tune_controller's (one shared builder, so the gated
 # "tune_controller-sized round" claim cannot drift out of lockstep)
@@ -41,6 +50,7 @@ HEADLINE = (24, 12, 3600.0)     # candidates x seeds x 720 bins (dt = 5 s)
 GRID = ((8, 8, 720.0), HEADLINE)
 GRID_FULL = GRID + ((48, 16, 3600.0),)
 WARM_REPS = 3
+OVERHEAD_REPS = 3               # telemetry on-vs-off repetitions (median)
 
 
 def build_scenario(n_seeds: int, duration_s: float, backend: str):
@@ -88,11 +98,79 @@ def bench_cell(n_candidates: int, n_seeds: int, duration_s: float) -> dict:
     }
 
 
-def run(full: bool = False) -> dict:
-    records = [bench_cell(*cell) for cell in (GRID_FULL if full else GRID)]
+def _jit_cache_stats(tel) -> dict:
+    """Compiled-backend cache behaviour over the whole grid: jit-program
+    cache hit rate and the compile-vs-dispatch wall-clock split (a cold
+    dispatch pays XLA compilation on top of the steady-state dispatch cost
+    its warm siblings measure)."""
+    snap = tel.metrics.snapshot()
+    core = snap["counter"].get("jaxsim_core_cache_total", {})
+    disp = snap["counter"].get("jaxsim_dispatch_total", {})
+    secs = snap["counter"].get("jaxsim_dispatch_seconds_total", {})
+    hits = core.get("result=hit", 0.0)
+    misses = core.get("result=miss", 0.0)
+    n_cold = disp.get("kind=cold", 0.0)
+    n_warm = disp.get("kind=warm", 0.0)
+    cold_s = secs.get("kind=cold", 0.0)
+    warm_s = secs.get("kind=warm", 0.0)
+    warm_mean = warm_s / n_warm if n_warm else 0.0
+    # compile_s: cold seconds beyond what those dispatches would have cost
+    # at the steady-state (warm) rate
+    compile_s = max(cold_s - n_cold * warm_mean, 0.0)
+    return {
+        "core_cache_hits": hits, "core_cache_misses": misses,
+        "core_cache_hit_rate": hits / max(hits + misses, 1.0),
+        "cold_dispatches": n_cold, "warm_dispatches": n_warm,
+        "cold_dispatch_s": cold_s, "warm_dispatch_s": warm_s,
+        "compile_s": compile_s, "dispatch_s": cold_s + warm_s - compile_s,
+    }
+
+
+def bench_telemetry_overhead(n_candidates: int, n_seeds: int,
+                             duration_s: float,
+                             reps: int = OVERHEAD_REPS) -> dict:
+    """Median wall clock of the headline flash-crowd round with telemetry
+    disabled vs enabled (fresh session per enabled rep) — the <= 5% bar
+    ``check_bench.py`` gates. Runs on the numpy backend: every candidate
+    sim records its streams there, so it bounds the per-``SimResult``
+    recording cost the jax path shares."""
+    objective = Objective(min_attainment=1.0, penalty_usd_per_hour=1e5)
+    candidates = PredictivePolicy.param_space().sample_lhs(n_candidates,
+                                                          seed=SEED)
+    ts = build_scenario(n_seeds, duration_s, "numpy")
+
+    def once(enabled: bool) -> float:
+        if enabled:
+            with telemetry.session():
+                t0 = time.perf_counter()
+                evaluate_candidates(ts, candidates, objective)
+                return time.perf_counter() - t0
+        t0 = time.perf_counter()
+        evaluate_candidates(ts, candidates, objective)
+        return time.perf_counter() - t0
+
+    once(False)                         # warm caches before timing
+    off = float(np.median([once(False) for _ in range(reps)]))
+    on = float(np.median([once(True) for _ in range(reps)]))
+    return {
+        "grid": f"{n_candidates}x{n_seeds}", "reps": reps,
+        "disabled_s": off, "enabled_s": on,
+        "overhead_frac": on / max(off, 1e-9) - 1.0,
+    }
+
+
+def run(full: bool = False) -> tuple:
+    # the whole grid runs under one telemetry session: jit-cache hit/miss
+    # and cold/warm dispatch-seconds accumulate for the report, and the
+    # session's JSONL event log is the CI artifact. (Recording adds the very
+    # overhead the telemetry_overhead section bounds at <= 5%, identically
+    # to both backends' timings.)
+    with telemetry.session() as tel:
+        records = [bench_cell(*cell) for cell in (GRID_FULL if full else GRID)]
     head = next(r for r in records
                 if (r["n_candidates"], r["n_seeds"]) == HEADLINE[:2])
-    return {
+    overhead = bench_telemetry_overhead(*HEADLINE)
+    bench = {
         "benchmark": "sim_perf",
         "full": full,
         "scenario": "mset-surveil/flash-crowd (tune_controller build)",
@@ -106,12 +184,16 @@ def run(full: bool = False) -> dict:
             "numpy_s": head["numpy_s"],
             "jax_warm_s": head["jax_warm_s"],
             "jax_cold_s": head["jax_cold_s"],
+            "compile_s": max(head["jax_cold_s"] - head["jax_warm_s"], 0.0),
         },
+        "jit_cache": _jit_cache_stats(tel),
+        "telemetry_overhead": overhead,
         "agreement": {
             "max_score_delta": max(r["max_score_delta"] for r in records),
             "same_winner": all(r["same_winner"] for r in records),
         },
     }
+    return bench, tel
 
 
 def main():
@@ -121,9 +203,11 @@ def main():
     ap.add_argument("--out", default="BENCH_sim.json",
                     help="JSON results path (CI uploads this artifact)")
     args = ap.parse_args()
-    bench = run(full=args.full)
+    bench, tel = run(full=args.full)
     with open(args.out, "w") as f:
         json.dump(bench, f, indent=2)
+    events_path = os.path.splitext(args.out)[0] + "_events.jsonl"
+    n_events = tel.export_jsonl(events_path)
     hdr = (f"{'cands':>6} {'seeds':>6} {'bins':>6} {'numpy':>9} "
            f"{'jax cold':>9} {'jax warm':>9} {'speedup':>8}")
     print(hdr)
@@ -134,9 +218,21 @@ def main():
     h = bench["headline"]
     print(f"\nheadline ({h['grid']}): {h['speedup']:.1f}x warm "
           f"({h['numpy_s']:.2f}s numpy vs {h['jax_warm_s']:.3f}s jax; "
-          f"cold {h['jax_cold_s']:.2f}s), "
+          f"cold {h['jax_cold_s']:.2f}s, ~{h['compile_s']:.2f}s compile), "
           f"max score delta {bench['agreement']['max_score_delta']:.2e}")
-    print(f"wrote {args.out}")
+    jc = bench["jit_cache"]
+    print(f"jit cache: {jc['core_cache_hit_rate'] * 100:.0f}% hit rate "
+          f"({jc['core_cache_hits']:.0f} hits / "
+          f"{jc['core_cache_misses']:.0f} misses), "
+          f"{jc['cold_dispatches']:.0f} cold + "
+          f"{jc['warm_dispatches']:.0f} warm dispatches, "
+          f"compile {jc['compile_s']:.2f}s vs dispatch "
+          f"{jc['dispatch_s']:.2f}s")
+    ov = bench["telemetry_overhead"]
+    print(f"telemetry overhead ({ov['grid']} numpy round): "
+          f"{ov['disabled_s']:.2f}s off vs {ov['enabled_s']:.2f}s on "
+          f"({ov['overhead_frac'] * 100:+.1f}%)")
+    print(f"wrote {args.out} and {events_path} ({n_events} events)")
 
 
 if __name__ == "__main__":

@@ -55,7 +55,7 @@ def _eval_record(ev):
     }
 
 
-def build_scenario(full: bool = False, backend: str = "numpy", *,
+def build_scenario(full: bool = False, backend: str = "auto", *,
                    n_seeds: int = None, duration_s: float = None):
     """The flash-crowd predictive-tuning scenario. ``sim_perf.py`` builds
     its grid cells through this same function (overriding only
@@ -81,7 +81,7 @@ def build_scenario(full: bool = False, backend: str = "numpy", *,
                            cold_start_s=COLD_START_S, backend=backend)
 
 
-def run(full: bool = False, backend: str = "numpy"):
+def run(full: bool = False, backend: str = "auto"):
     ts = build_scenario(full, backend=backend)
     space = PredictivePolicy.param_space()
     # the quota can hold the whole burst, so demand full attainment and make
@@ -141,11 +141,12 @@ def main():
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--out", default="BENCH_tuner.json",
                     help="JSON results path (CI uploads this artifact)")
-    ap.add_argument("--backend", default="numpy",
+    ap.add_argument("--backend", default="auto",
                     choices=("numpy", "jax", "auto"),
                     help="simulator backend candidates are scored on "
-                         "(default numpy: the committed baseline's path; "
-                         "jax = compiled batched rounds, see sim_perf.py)")
+                         "(default auto: compiled batched rounds when the "
+                         "family has a kernel — see sim_perf.py; numpy = "
+                         "the reference per-candidate loop)")
     args = ap.parse_args()
     report, bench = run(full=args.full, backend=args.backend)
     with open(args.out, "w") as f:

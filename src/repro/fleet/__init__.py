@@ -6,6 +6,7 @@
 # surfaces to fleet operating cost. The tuning subpackage turns the loop on
 # the controller itself: `tune()` autonomously scopes autoscaler/fleet
 # parameters by racing candidate configs through the simulator.
+from repro.fleet import telemetry
 from repro.fleet.autoscaler import (HeterogeneousPredictivePolicy, Policy,
                                     PredictivePolicy, QueueProportionalPolicy,
                                     ReactivePolicy, StaticPolicy,
@@ -20,7 +21,8 @@ from repro.fleet.kernels import KernelObs, PolicyKernel, make_kernel
 from repro.fleet.report import (CLASS_HEADERS, REPORT_HEADERS, ClassReport,
                                 FleetReport, best_per_trace, class_table,
                                 comparison_table, cost_efficiency_table,
-                                summarize, weighted_percentile)
+                                summarize, telemetry_dashboard,
+                                weighted_percentile)
 from repro.fleet.scenarios import (Scenario, interactive_batch_workload,
                                    lm_decode_scenario, mset_scenario,
                                    tiered_sla_workload)
@@ -50,7 +52,7 @@ __all__ = [
     "CLASS_HEADERS",
     "REPORT_HEADERS", "ClassReport", "FleetReport", "best_per_trace",
     "class_table", "comparison_table", "cost_efficiency_table", "summarize",
-    "weighted_percentile", "Scenario", "interactive_batch_workload",
+    "telemetry_dashboard", "weighted_percentile", "Scenario", "interactive_batch_workload",
     "lm_decode_scenario", "mset_scenario", "tiered_sla_workload",
     "FleetConfig", "FleetObs", "PoolConfig", "SimResult", "simulate",
     "simulate_fleet", "Trace", "diurnal_trace", "flash_crowd_trace",
@@ -60,5 +62,5 @@ __all__ = [
     "Integer", "Objective", "ParamSpace", "RaceResult", "TuningBudget",
     "TuningReport", "TuningScenario", "discipline_dim",
     "evaluate_candidates", "exhaustive", "pareto_frontier", "quota_dims",
-    "race", "tune", "tuning_scenario",
+    "race", "tune", "tuning_scenario", "telemetry",
 ]

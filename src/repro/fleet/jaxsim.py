@@ -29,7 +29,11 @@ compiled programs instead of recompiling per round.
 """
 from __future__ import annotations
 
+import time
+
 import numpy as np
+
+from repro.fleet import telemetry
 
 _EPS = 1e-12
 
@@ -47,6 +51,11 @@ def available() -> bool:
 # by config (kernels._KERNEL_CACHE), so repeated rounds of one tuning run —
 # and repeated simulations of one scenario — all hit the same entry.
 _CORE_CACHE: dict = {}
+
+# (core id, padded shape signature) pairs that have dispatched at least once:
+# a first dispatch pays XLA compilation (cold), repeats are pure dispatch
+# (warm) — the classifier behind the compile-vs-dispatch timing split.
+_DISPATCHED: set = set()
 
 
 def _build_core(kernel, *, T, C, P, Tpad, W, dt, order, t_fixed, t_unit,
@@ -206,6 +215,8 @@ def _core_for(kernel, **statics):
         (k, tuple(v) if isinstance(v, (list, np.ndarray)) else v)
         for k, v in statics.items()))
     core = _CORE_CACHE.get(key)
+    telemetry.counter("jaxsim_core_cache_total",
+                      result="hit" if core is not None else "miss")
     if core is None:
         core = _build_core(kernel, **statics)
         _CORE_CACHE[key] = core
@@ -258,13 +269,27 @@ def run_dynamics(kernel, *, arrivals, jb, dt, order, t_fixed, t_unit, max_b,
     # quotients the numpy reference sees
     rate = arrivals / float(dt)
     rate_sum = arrivals.sum(axis=2) / float(dt)
-    with enable_x64():
-        out = core(arrivals, rate, rate_sum, np.asarray(jb, np.int32),
-                   pad(tables["cnt"]), pad(tables["cls_of_rank"]),
-                   pad(tables["drop_rank"]),
-                   {k: pad(v) for k, v in kp.items()},
-                   pad(np.asarray(min_rep, np.float64)),
-                   pad(np.asarray(max_rep, np.float64)),
-                   pad(np.asarray(init_ready, np.float64)))
-        out = jax.device_get(out)
+    # cold = this (compiled core, input shapes) pair has never dispatched, so
+    # this call pays XLA compilation; the split is what the sim benchmark and
+    # the tuner timing breakdown report as compile-vs-dispatch seconds
+    sig = (id(core), Npad, S, T, C, P)
+    cold = sig not in _DISPATCHED
+    t0 = time.perf_counter()
+    with telemetry.span("jaxsim.dispatch",
+                        kind="cold" if cold else "warm",
+                        candidates=N, padded=Npad, seeds=S, bins=T):
+        with enable_x64():
+            out = core(arrivals, rate, rate_sum, np.asarray(jb, np.int32),
+                       pad(tables["cnt"]), pad(tables["cls_of_rank"]),
+                       pad(tables["drop_rank"]),
+                       {k: pad(v) for k, v in kp.items()},
+                       pad(np.asarray(min_rep, np.float64)),
+                       pad(np.asarray(max_rep, np.float64)),
+                       pad(np.asarray(init_ready, np.float64)))
+            out = jax.device_get(out)
+    _DISPATCHED.add(sig)
+    kind = "cold" if cold else "warm"
+    telemetry.counter("jaxsim_dispatch_total", kind=kind)
+    telemetry.counter("jaxsim_dispatch_seconds_total",
+                      time.perf_counter() - t0, kind=kind)
     return {k: np.asarray(v)[:N] for k, v in out.items()}

@@ -33,6 +33,7 @@ from typing import Callable, NamedTuple
 
 import numpy as np
 
+from repro.fleet import telemetry
 from repro.fleet.autoscaler import (HeterogeneousPredictivePolicy,
                                     PredictivePolicy, QueueProportionalPolicy,
                                     ReactivePolicy, StaticPolicy)
@@ -316,6 +317,8 @@ def make_kernel(policy, fleet, classes, *, max_window: int = None,
     if key is None:
         return None
     kernel = _KERNEL_CACHE.get(key)
+    telemetry.counter("fleet_kernel_cache_total",
+                      result="hit" if kernel is not None else "miss")
     if kernel is not None:
         return kernel
     if type(policy) is StaticPolicy:

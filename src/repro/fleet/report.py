@@ -143,6 +143,19 @@ def comparison_table(reports: list) -> str:
     return markdown_table(REPORT_HEADERS, rows)
 
 
+def telemetry_dashboard(sim: SimResult, width: int = 60) -> str:
+    """ASCII sparkline dashboard of one simulation's telemetry streams
+    (queue depth, replicas, arrival rate, utilization, observed service
+    times), rendered from a throwaway registry — works on any finished
+    ``SimResult``, no active telemetry session required."""
+    from repro.fleet.telemetry import MetricsRegistry, record_sim
+    from repro.fleet.telemetry.export import dashboard
+
+    reg = MetricsRegistry()
+    record_sim(reg, sim)
+    return dashboard(reg, width=width)
+
+
 def best_per_trace(reports: list, min_attainment: float = 0.99) -> list:
     """Cheapest report per trace among those meeting ``min_attainment``."""
     best = {}

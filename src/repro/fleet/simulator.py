@@ -33,6 +33,7 @@ from typing import Optional
 import numpy as np
 
 from repro.core.cost_model import dollar_cost
+from repro.fleet import telemetry
 from repro.fleet.cohort import multiclass_cohort_metrics
 from repro.fleet.discipline import CohortQueue, get_discipline
 from repro.fleet.traces import Trace
@@ -304,7 +305,7 @@ def _assemble_result(workload, fleet: FleetConfig, disc, policy_name: str,
     # slots are drain-rank-ordered; report per-pool served in pool order
     rank_of = np.argsort(np.asarray(order))
 
-    return SimResult(
+    result = SimResult(
         trace=trace, fleet=fleet, policy_name=policy_name,
         slo_s=float(slos.min()),
         arrivals=trace.arrivals.astype(float), admitted=admitted,
@@ -321,6 +322,12 @@ def _assemble_result(workload, fleet: FleetConfig, disc, policy_name: str,
         class_ok=class_ok,
         class_sojourns=tuple((cm.sojourn_values, cm.sojourn_weights)
                              for cm in cms))
+    # Both backends funnel their dynamics through this one assembly path, so
+    # an active telemetry session sees identical streams from either; the
+    # hook only *reads* the finished result (no-op when disabled).
+    telemetry.record(result, slot_bt=slot_bt, slot_served=slot_served,
+                     order=order)
+    return result
 
 
 def _resolve_backend(backend: str, fleet: FleetConfig, policy, classes):

@@ -8,9 +8,12 @@ vectorized simulator consumes.
 """
 from __future__ import annotations
 
+import logging
 from dataclasses import dataclass
 
 import numpy as np
+
+_LOG = logging.getLogger(__name__)
 
 
 @dataclass(frozen=True)
@@ -117,10 +120,12 @@ def load_trace_csv(path, rate_col=1, dt_s: float = 60.0, *, mean_rate_per_s:
     import os
 
     rates, header, col = [], None, None
+    n_skipped = 0                   # blank / comment / header lines
     with open(path) as f:
         for lineno, line in enumerate(f, start=1):
             row = line.strip()
             if not row or row.startswith("#"):
+                n_skipped += 1
                 continue
             cells = [c.strip() for c in row.split(delimiter)]
             if header is None:
@@ -133,6 +138,7 @@ def load_trace_csv(path, rate_col=1, dt_s: float = 60.0, *, mean_rate_per_s:
                         raise ValueError(f"{path}: no column {rate_col!r} in "
                                          f"header {cells}")
                     header, col = cells, cells.index(rate_col)
+                    n_skipped += 1
                     continue
                 col = int(rate_col)
 
@@ -144,6 +150,7 @@ def load_trace_csv(path, rate_col=1, dt_s: float = 60.0, *, mean_rate_per_s:
                         return False
                 if cells and not any(_numeric(c) for c in cells):
                     header = cells          # label-only row: a real header
+                    n_skipped += 1
                     continue
                 header = []   # any numeric cell = data row; bad rate cells
                 #               fall through to the named-line errors below
@@ -161,13 +168,25 @@ def load_trace_csv(path, rate_col=1, dt_s: float = 60.0, *, mean_rate_per_s:
     if not rates:
         raise ValueError(f"{path}: no data rows")
     rates = np.clip(np.asarray(rates, float), 0.0, None)
+    rescale = 1.0
     if mean_rate_per_s is not None:
         mean = rates.mean()
         if mean <= 0:
             raise ValueError(f"{path}: all-zero trace cannot be rescaled "
                              f"to mean {mean_rate_per_s}")
-        rates = rates * (mean_rate_per_s / mean)
+        rescale = mean_rate_per_s / mean
+        rates = rates * rescale
     stem = os.path.splitext(os.path.basename(str(path)))[0]
+    # record what the loader did to the raw profile — a silently rescaled
+    # trace is indistinguishable from the recording it came from
+    from repro.fleet import telemetry
+    telemetry.event("trace_csv_loaded", path=str(path), rows=len(rates),
+                    skipped_rows=n_skipped, rescale_factor=float(rescale),
+                    mean_rate_per_s=float(rates.mean()))
+    if rescale != 1.0 or n_skipped:
+        _LOG.info("load_trace_csv %s: %d data rows (%d non-data lines "
+                  "skipped), mean-rate rescale factor %.6g",
+                  path, len(rates), n_skipped, rescale)
     return replay_trace(rates, dt_s, n_seeds, seed, name=name or stem)
 
 

@@ -21,6 +21,7 @@ from typing import Callable, Optional
 import numpy as np
 
 from repro.core.cost_model import dollar_cost
+from repro.fleet import telemetry
 from repro.fleet.report import weighted_percentile
 from repro.fleet.simulator import (FleetConfig, SimResult,
                                    draw_cold_start_delays, simulate_fleet)
@@ -130,8 +131,9 @@ class TuningScenario:
       (a ``discipline`` dim in the space overrides the fixture).
     * ``backend`` — the simulator implementation candidates are scored on:
       ``"numpy"`` (reference), ``"jax"`` (compiled; a whole racing round is
-      one jitted candidate x seed batch), or ``"auto"`` (compiled when the
-      policy family has a kernel, numpy otherwise).
+      one jitted candidate x seed batch), or ``"auto"`` (the default:
+      compiled when the policy family has a kernel, numpy otherwise — every
+      built-in family has one, and both paths agree to float rounding).
     """
     name: str
     workload: Workload
@@ -142,7 +144,7 @@ class TuningScenario:
     max_queue: Optional[float] = None
     cold_start_seed: int = 0
     build_policy: Callable = None    # override: params -> Policy
-    backend: str = "numpy"
+    backend: str = "auto"
 
     def __post_init__(self):
         if isinstance(self.workload, Trace):
@@ -370,6 +372,8 @@ def evaluate_candidates(scenario: TuningScenario, candidates: list,
     if backend not in ("numpy", "jax", "auto"):
         raise ValueError(f"unknown backend {backend!r}; "
                          "expected 'numpy', 'jax' or 'auto'")
+    telemetry.counter("tuning_sims_total",
+                      len(candidates) * (s1 - s0), backend=backend)
     if backend != "numpy":
         evals = _evaluate_batched(scenario, candidates, objective, s0, s1)
         if evals is not None:

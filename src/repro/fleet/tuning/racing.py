@@ -29,6 +29,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.fleet import telemetry
 from repro.fleet.tuning.evaluate import (CandidateEval, Objective,
                                          TuningScenario, evaluate_candidates)
 
@@ -89,9 +90,11 @@ def race(scenario: TuningScenario, candidates: list, objective: Objective,
     rnd = 0
     while s_done < n_seeds:
         s_next = min(max(s_done * eta, init_seeds), n_seeds)
-        fresh = evaluate_candidates(
-            scenario, [candidates[i] for i in alive], objective,
-            s0=s_done, s1=s_next)
+        with telemetry.span("tune.race.round", round=rnd, alive=len(alive),
+                            s0=s_done, s1=s_next):
+            fresh = evaluate_candidates(
+                scenario, [candidates[i] for i in alive], objective,
+                s0=s_done, s1=s_next)
         sims += len(alive) * (s_next - s_done)
         for i, ev in zip(alive, fresh):
             if evals[i] is None:
@@ -102,30 +105,36 @@ def race(scenario: TuningScenario, candidates: list, objective: Objective,
         s_done = s_next
 
         if len(alive) > 1:
-            by_score = sorted(alive, key=lambda i: evals[i].mean_score())
-            inc = evals[by_score[0]]
-            keep = [by_score[0]]
-            for i in by_score[1:]:
-                if _sprt_cull(evals[i].score - inc.score, alpha, beta):
-                    culled_at[i] = rnd
-                else:
-                    keep.append(i)
-            # successive halving on top of the SPRT: even when the test is
-            # inconclusive for many candidates, at most ceil(|alive|/eta)
-            # advance to the next (eta-x costlier) rung
-            cap = max(int(np.ceil(len(alive) / eta)), min_survivors)
-            if s_done < n_seeds and len(keep) > cap:
-                for i in keep[cap:]:
-                    culled_at[i] = rnd
-                keep = keep[:cap]
+            with telemetry.span("tune.race.cull", round=rnd):
+                by_score = sorted(alive, key=lambda i: evals[i].mean_score())
+                inc = evals[by_score[0]]
+                keep = [by_score[0]]
+                for i in by_score[1:]:
+                    if _sprt_cull(evals[i].score - inc.score, alpha, beta):
+                        culled_at[i] = rnd
+                        telemetry.counter("tuning_culled_total", reason="sprt")
+                    else:
+                        keep.append(i)
+                # successive halving on top of the SPRT: even when the test is
+                # inconclusive for many candidates, at most ceil(|alive|/eta)
+                # advance to the next (eta-x costlier) rung
+                cap = max(int(np.ceil(len(alive) / eta)), min_survivors)
+                if s_done < n_seeds and len(keep) > cap:
+                    for i in keep[cap:]:
+                        culled_at[i] = rnd
+                        telemetry.counter("tuning_culled_total",
+                                          reason="halving")
+                    keep = keep[:cap]
             alive = keep
         rnd += 1
         if len(alive) == 1 and s_done < n_seeds:
             # a lone survivor still gets its full-budget evaluation (the
             # winner's headline numbers must use every replicate)
-            fresh = evaluate_candidates(
-                scenario, [candidates[alive[0]]], objective,
-                s0=s_done, s1=n_seeds)
+            with telemetry.span("tune.race.round", round=rnd,
+                                alive=1, s0=s_done, s1=n_seeds):
+                fresh = evaluate_candidates(
+                    scenario, [candidates[alive[0]]], objective,
+                    s0=s_done, s1=n_seeds)
             sims += n_seeds - s_done
             evals[alive[0]].extend(fresh[0])
             evals[alive[0]].n_rounds = rnd + 1

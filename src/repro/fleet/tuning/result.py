@@ -68,6 +68,7 @@ class TuningReport:
     baseline: object = None          # CandidateEval of the hand-set config
     evals: list = field(default_factory=list, repr=False)
     space: object = None
+    spans: object = None             # telemetry Span tree (None when off)
     _scenario: object = field(default=None, repr=False)
 
     @property
@@ -141,7 +142,19 @@ class TuningReport:
                       f"r2 = {self.surface.r2:.3f}"]
         lines += ["", "cost-vs-attainment Pareto frontier:",
                   frontier_table(self.frontier)]
+        timing = self.timing_breakdown()
+        if timing:
+            lines += ["", "timing breakdown (telemetry spans):", timing]
         art = self.ascii_surface()
         if art:
             lines += ["", art]
         return "\n".join(lines)
+
+    def timing_breakdown(self) -> str:
+        """Rendered span tree of this tune (sample -> racing rounds ->
+        culls -> refine, with the compiled backend's cold/warm dispatches
+        nested where they ran). Empty string when telemetry was off."""
+        if self.spans is None:
+            return ""
+        from repro.fleet.telemetry import render_spans
+        return render_spans([self.spans])

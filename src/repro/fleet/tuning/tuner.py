@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.core.recommender import recommend
 from repro.core.surfaces import _n_cols, fit_response_surface
+from repro.fleet import telemetry
 from repro.fleet.simulator import FleetConfig
 from repro.fleet.tuning.evaluate import (Objective, TuningScenario,
                                          evaluate_candidates)
@@ -48,7 +49,7 @@ def tuning_scenario(scenario, workload, policy_cls, *, shape_name: str = None,
                     fleet: FleetConfig = None, cold_start_s=60.0,
                     max_queue: float = None, discipline: str = "fifo",
                     cold_start_seed: int = 0, name: str = None,
-                    backend: str = "numpy") -> TuningScenario:
+                    backend: str = "auto") -> TuningScenario:
     """Build a ``TuningScenario`` from a fleet ``Scenario`` (scoping rows).
 
     Single-pool by default: the pool's shape is ``shape_name`` or the
@@ -58,7 +59,8 @@ def tuning_scenario(scenario, workload, policy_cls, *, shape_name: str = None,
     for heterogeneous tuning (e.g. ``HeterogeneousPredictivePolicy`` with
     ``quota:*`` dims). ``backend`` picks the simulator implementation
     candidates are scored on ("numpy" reference loop, "jax" compiled
-    batched, "auto").
+    batched, or the default "auto": compiled when the family has a kernel,
+    numpy otherwise).
     """
     if fleet is None:
         if shape_name is None:
@@ -123,24 +125,31 @@ def tune(scenario: TuningScenario, space, objective: Objective = None,
     """
     objective = objective or Objective()
     budget = budget or TuningBudget()
-    if budget.sampler == "grid":
-        candidates = space.grid(budget.grid_levels)
-    elif budget.sampler == "lhs":
-        candidates = space.sample_lhs(budget.n_candidates, seed=seed)
-    else:
-        raise ValueError(f"unknown sampler {budget.sampler!r}")
+    with telemetry.span("tune", scenario=scenario.name,
+                        backend=scenario.backend) as root:
+        with telemetry.span("tune.sample", sampler=budget.sampler):
+            if budget.sampler == "grid":
+                candidates = space.grid(budget.grid_levels)
+            elif budget.sampler == "lhs":
+                candidates = space.sample_lhs(budget.n_candidates, seed=seed)
+            else:
+                raise ValueError(f"unknown sampler {budget.sampler!r}")
 
-    if budget.racing:
-        rr = race(scenario, candidates, objective,
-                  init_seeds=budget.init_seeds, eta=budget.eta,
-                  alpha=budget.alpha, beta=budget.beta)
-    else:
-        rr = exhaustive(scenario, candidates, objective)
+        with telemetry.span("tune.race", candidates=len(candidates),
+                            racing=budget.racing):
+            if budget.racing:
+                rr = race(scenario, candidates, objective,
+                          init_seeds=budget.init_seeds, eta=budget.eta,
+                          alpha=budget.alpha, beta=budget.beta)
+            else:
+                rr = exhaustive(scenario, candidates, objective)
 
-    surface, names = _fit_surface(space, rr.evals)
-    base_eval = None
-    if baseline is not None:
-        base_eval = evaluate_candidates(scenario, [baseline], objective)[0]
+        with telemetry.span("tune.refine"):
+            surface, names = _fit_surface(space, rr.evals)
+            base_eval = None
+            if baseline is not None:
+                base_eval = evaluate_candidates(scenario, [baseline],
+                                                objective)[0]
 
     return TuningReport(
         scenario_name=scenario.name,
@@ -152,4 +161,4 @@ def tune(scenario: TuningScenario, space, objective: Objective = None,
         surface=surface, surface_names=names,
         sims_used=rr.sims_used, full_budget=rr.full_budget,
         baseline=base_eval, evals=rr.evals, space=space,
-        _scenario=scenario)
+        _scenario=scenario, spans=root)

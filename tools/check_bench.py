@@ -32,7 +32,10 @@ Simulator-backend gate (``benchmark == "sim_perf"``):
   numpy loop by >= 5x warm on the headline flash-crowd tuning round —
   unless the JAX path is already under the absolute wall-clock grace floor
   (both too fast to time meaningfully);
-* the backends agree: per-seed scores within tolerance, same winner.
+* the backends agree: per-seed scores within tolerance, same winner;
+* telemetry stays cheap: the headline round with a telemetry session active
+  runs <= 5% slower than with telemetry off — unless the absolute slowdown
+  is under the timing-noise grace floor.
 
 Usage (CI runs exactly this):
 
@@ -201,6 +204,9 @@ MIN_SIM_SPEEDUP = 5.0           # compiled path vs numpy loop (ISSUE 5)
 SIM_WALL_FLOOR_S = 0.5          # grace floor: below this the JAX wall clock
 #                                 is timing noise, not a regression signal
 SIM_SCORE_TOL = 1e-6            # backend-agreement bar on per-seed scores
+MAX_TELEMETRY_OVERHEAD = 0.05   # telemetry-on <= 5% slower (ISSUE 6)
+TELEMETRY_FLOOR_S = 0.2         # ...unless the absolute slowdown is under
+#                                 this (relative % on a fast round is noise)
 
 
 def compare_sim(fresh: dict, base: dict) -> list:
@@ -226,6 +232,24 @@ def compare_sim(fresh: dict, base: dict) -> list:
                         f"{delta} (tol {SIM_SCORE_TOL})")
     if not agree.get("same_winner"):
         problems.append("sim: backends disagree on the round winner")
+    ov = fresh.get("telemetry_overhead")
+    if ov is None:
+        problems.append("sim: telemetry_overhead section missing — "
+                        "sim_perf.py should measure on-vs-off wall clock")
+    else:
+        off, on = ov.get("disabled_s"), ov.get("enabled_s")
+        if off is None or on is None:
+            problems.append("sim: telemetry_overhead incomplete "
+                            f"(have {sorted(ov)})")
+        elif (on > off * (1.0 + MAX_TELEMETRY_OVERHEAD)
+              and on - off > TELEMETRY_FLOOR_S):
+            problems.append(
+                f"sim: telemetry session costs "
+                f"{(on / off - 1.0) * 100:.1f}% on the {ov.get('grid')} "
+                f"round ({off:.2f}s off vs {on:.2f}s on) — bar "
+                f"{MAX_TELEMETRY_OVERHEAD * 100:.0f}% "
+                f"(slowdown {on - off:.2f}s > {TELEMETRY_FLOOR_S}s "
+                "grace floor)")
     fresh_cells = {(r["n_candidates"], r["n_seeds"], r["n_bins"])
                    for r in fresh.get("records", [])}
     for brec in base.get("records", []):
@@ -284,11 +308,14 @@ def main(argv=None) -> int:
                 print(f"  - {p}")
             return 1
         head = fresh["headline"]
+        ov = fresh.get("telemetry_overhead", {})
         print(f"sim gate green: compiled backend {head['speedup']:.1f}x the "
               f"numpy loop on the {head['grid']} headline round "
               f"(bar {MIN_SIM_SPEEDUP}x), backends agree "
               f"(max score delta "
-              f"{fresh['agreement']['max_score_delta']:.2e})")
+              f"{fresh['agreement']['max_score_delta']:.2e}), telemetry "
+              f"overhead {ov.get('overhead_frac', 0.0) * 100:+.1f}% "
+              f"(bar {MAX_TELEMETRY_OVERHEAD * 100:.0f}%)")
         return 0
 
     if fresh.get("benchmark") == "controller_tuning":
