@@ -31,7 +31,7 @@ from repro.fleet.simulator import (FleetConfig, FleetObs, PoolConfig,
                                    simulate, simulate_fleet)
 from repro.fleet.traces import (Trace, diurnal_trace, flash_crowd_trace,
                                 load_trace_csv, poisson_trace, ramp_trace,
-                                replay_trace, standard_traces)
+                                replay_trace, resample_trace, standard_traces)
 from repro.fleet.tuning import (CandidateEval, Categorical, Continuous,
                                 Integer, Objective, ParamSpace, RaceResult,
                                 TuningBudget, TuningReport, TuningScenario,
@@ -57,7 +57,7 @@ __all__ = [
     "FleetConfig", "FleetObs", "PoolConfig", "SimResult", "simulate",
     "simulate_fleet", "Trace", "diurnal_trace", "flash_crowd_trace",
     "load_trace_csv", "poisson_trace", "ramp_trace", "replay_trace",
-    "standard_traces", "RequestClass", "ServiceModel", "Workload",
+    "resample_trace", "standard_traces", "RequestClass", "ServiceModel", "Workload",
     "service_model_from_cell", "CandidateEval", "Categorical", "Continuous",
     "Integer", "Objective", "ParamSpace", "RaceResult", "TuningBudget",
     "TuningReport", "TuningScenario", "discipline_dim",

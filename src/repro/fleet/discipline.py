@@ -214,6 +214,14 @@ def cohort_tables(discipline, classes, n_bins: int, dt_s: float) -> dict:
     * ``drop_rank`` (T, C) int32 — admission-shedding class order per arrival
       bin (largest key first, ties to the higher class index), matching
       ``CohortQueue.drop_order``.
+    * ``key_of_rank`` (C*T,) float — the cohort key at each global rank:
+      what prices the substep engine's *preemption rank*. A formed batch
+      carries the head-of-queue key at formation (``table_head_key`` — the
+      key of the most urgent cohort it swept up); a preemptive discipline
+      interrupts it whenever the head-of-queue key drops strictly below
+      that. Ranking by the head rather than the largest key touched keeps
+      urgent mass inside a mixed batch from being checkpointed behind its
+      own class's fresh arrivals (priority inversion).
     """
     disc = get_discipline(discipline)
     classes = tuple(classes)
@@ -234,7 +242,73 @@ def cohort_tables(discipline, classes, n_bins: int, dt_s: float) -> dict:
     drop_rank = np.empty((n_bins, C), np.int32)
     for t in range(n_bins):
         drop_rank[t] = np.lexsort((-np.arange(C), -keys[:, t]))
-    return {"cnt": cnt, "cls_of_rank": cls_of_rank, "drop_rank": drop_rank}
+    return {"cnt": cnt, "cls_of_rank": cls_of_rank, "drop_rank": drop_rank,
+            "key_of_rank": keys.ravel()[order]}
+
+
+def table_prefix(Acum: np.ndarray, done: np.ndarray,
+                 cnt: np.ndarray) -> np.ndarray:
+    """(S, C*T+1) available mass in every prefix of the global serve order.
+
+    ``Acum`` (S, C, T+1) per-class cumulative-admitted curves (leading zero,
+    flat beyond the current bin), ``done`` (S, C) per-class poured totals.
+    Entry ``r`` prices the first ``r`` cohorts exactly as the compiled
+    backend's bisect does: per class, ``clip(cum_at_prefix - done, 0)``,
+    then the sum over classes — cohorts not yet arrived sit flat on the
+    curve and contribute zero."""
+    S = Acum.shape[0]
+    idx = np.broadcast_to(cnt[None], (S,) + cnt.shape)
+    a = np.take_along_axis(Acum, idx, axis=2)
+    return np.clip(a - done[:, :, None], 0.0, None).sum(axis=1)
+
+
+def table_pour(Acum: np.ndarray, done: np.ndarray, amt: np.ndarray,
+               tables: dict):
+    """Pour ``amt`` (S,) into the queue in global key order — the vectorized
+    numpy mirror of the compiled backend's covering-prefix bisect, driven by
+    the same ``cohort_tables`` and the same operation order (so the substep
+    engines agree bit-for-bit). Returns ``(split, key)``: the (S, C)
+    per-class mass taken and the (S,) largest cohort key touched — the
+    upper edge of the swept key range (``-inf`` when nothing poured). The
+    substep engines rank a formed batch for preemption by its *head* key
+    (``table_head_key`` before the pour), not this upper edge."""
+    cnt = tables["cnt"]
+    cls_of_rank = tables["cls_of_rank"]
+    key_of_rank = tables["key_of_rank"]
+    S, C, _ = Acum.shape
+    CT = cnt.shape[1] - 1
+    pre = table_prefix(Acum, done, cnt)
+    amt = np.minimum(np.maximum(np.asarray(amt, float), 0.0), pre[:, CT])
+    # minimal prefix rank covering amt: the prefixes are non-decreasing, so
+    # counting the strictly-cheaper ones lands exactly where the compiled
+    # backend's left bisect does
+    lo = (pre < amt[:, None]).sum(axis=1)
+    rm1 = np.maximum(lo - 1, 0)
+    j = cnt[:, rm1]                                        # (C, S)
+    a = np.take_along_axis(Acum, j.T[:, :, None], axis=2)[:, :, 0]
+    base = np.clip(a - done, 0.0, None)
+    marginal = cls_of_rank[rm1]
+    split = base + np.maximum(amt - base.sum(axis=1), 0.0)[:, None] \
+        * (np.arange(C)[None, :] == marginal[:, None])
+    split = np.where((lo > 0)[:, None], split, 0.0)
+    key = np.where(lo > 0, key_of_rank[rm1], -np.inf)
+    return split, key
+
+
+def table_head_key(Acum: np.ndarray, done: np.ndarray,
+                   tables: dict) -> np.ndarray:
+    """(S,) key of the head-of-queue cohort — the next mass a pour would
+    touch; ``+inf`` when the queue is empty. The substep engine's preemption
+    test compares this against a running batch's ``key`` (strictly lower
+    head key interrupts), and its resume gate re-activates a checkpointed
+    batch once no queued cohort outranks it."""
+    cnt = tables["cnt"]
+    key_of_rank = tables["key_of_rank"]
+    CT = cnt.shape[1] - 1
+    pre = table_prefix(Acum, done, cnt)
+    hr = np.minimum((pre <= 0.0).sum(axis=1), CT)
+    return np.where(pre[:, CT] > 0.0, key_of_rank[np.maximum(hr - 1, 0)],
+                    np.inf)
 
 
 def split_service(discipline, classes, admitted: np.ndarray,

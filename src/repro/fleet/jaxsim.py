@@ -59,7 +59,7 @@ _DISPATCHED: set = set()
 
 
 def _build_core(kernel, *, T, C, P, Tpad, W, dt, order, t_fixed, t_unit,
-                max_b, max_queue):
+                max_b, max_queue, n_substeps=1, preemptive=False, tput=()):
     import jax
     import jax.numpy as jnp
     from jax import lax
@@ -97,14 +97,15 @@ def _build_core(kernel, *, T, C, P, Tpad, W, dt, order, t_fixed, t_unit,
             * (arange_c == marginal)
         return jnp.where(lo > 0, served, jnp.zeros(C))
 
-    def sim_one(arr, rate, rate_sum, jb, cnt, cls_rank, drop_rank, kp,
-                min_rep, max_rep, init_ready):
+    def sim_one(arr, rate, rate_sum, jb, cnt, cls_rank, drop_rank, key_rank,
+                kp, min_rep, max_rep, init_ready):
         """One (candidate, seed) trajectory. arr (T, C) float arrivals;
         rate (T, C) / rate_sum (T,) are the per-class and aggregate arrival
         rates divided by dt on the HOST — XLA rewrites division by a
         constant into an inexact reciprocal multiply, which would shift
         rates by an ulp and flip policy ceil()s vs the numpy reference;
-        jb (T, P) int launch-landing offsets; tables/params per candidate."""
+        jb (T, P) int launch-landing offsets; tables/params per candidate.
+        ``key_rank`` feeds only the substep core (``sim_one_fine``)."""
         col = jnp.arange(T + 1)
 
         def step(carry, x):
@@ -201,12 +202,270 @@ def _build_core(kernel, *, T, C, P, Tpad, W, dt, order, t_fixed, t_unit,
         _, ys = lax.scan(step, carry0, xs)
         return ys
 
-    over_seeds = jax.vmap(sim_one,
+    n_sub = int(n_substeps)
+    dt_sub = dt / n_sub                     # host float, matches numpy
+
+    def sim_one_fine(arr, rate, rate_sum, jb, cnt, cls_rank, drop_rank,
+                     key_rank, kp, min_rep, max_rep, init_ready):
+        """The substep (fine-Δt, checkpoint-resume, optionally preemptive)
+        trajectory — the compiled twin of the numpy
+        ``_simulate_fleet_substep`` engine. Substeps are unrolled inside the
+        scan step (``n_substeps`` is small and static), the batch residue
+        rides in the carry, and every float op mirrors the numpy engine's
+        operation order so the two agree bit-for-bit."""
+        col = jnp.arange(T + 1)
+
+        def take(Acum, done, r):
+            j = cnt[:, r]
+            a = jnp.take_along_axis(Acum, j[:, None], axis=1)[:, 0]
+            return jnp.clip(a - done, 0.0, None)
+
+        def pour(Acum, done, amt):
+            """``serve`` + the largest cohort key touched (the batch's
+            preemption rank; -inf when nothing poured)."""
+            full = take(Acum, done, CT)
+            amt = jnp.minimum(jnp.maximum(amt, 0.0), full.sum())
+
+            def bisect(_, lohi):
+                lo, hi = lohi
+                mid = (lo + hi) // 2
+                ge = take(Acum, done, mid).sum() >= amt
+                return (jnp.where(ge, lo, mid + 1), jnp.where(ge, mid, hi))
+
+            lo, _ = lax.fori_loop(0, n_rank_iters, bisect,
+                                  (jnp.int32(0), jnp.int32(CT)))
+            rm1 = jnp.maximum(lo - 1, 0)
+            base = take(Acum, done, rm1)
+            marginal = cls_rank[rm1]
+            split = base + jnp.maximum(amt - base.sum(), 0.0) \
+                * (arange_c == marginal)
+            split = jnp.where(lo > 0, split, jnp.zeros(C))
+            key = jnp.where(lo > 0, key_rank[rm1], -jnp.inf)
+            return split, key
+
+        def head_key(Acum, done):
+            """Key of the head-of-queue cohort; +inf when empty."""
+            total = take(Acum, done, CT).sum()
+
+            def bisect(_, lohi):
+                lo, hi = lohi
+                mid = (lo + hi) // 2
+                ge = take(Acum, done, mid).sum() > 0.0
+                return (jnp.where(ge, lo, mid + 1), jnp.where(ge, mid, hi))
+
+            lo, _ = lax.fori_loop(0, n_rank_iters, bisect,
+                                  (jnp.int32(0), jnp.int32(CT)))
+            return jnp.where(total > 0.0, key_rank[jnp.maximum(lo - 1, 0)],
+                             jnp.inf)
+
+        def step(carry, x):
+            (ready, in_flight, pend, done, Acum, busy_m, busy_w, busy_k,
+             held_m, held_w, held_k, pstate) = carry
+            arr_c, rate_c, rate_sum, jb_t, t = x
+            matured = pend[t]
+            ready = ready + matured
+            in_flight = in_flight - matured
+
+            total_prev = Acum[:, T]
+            drop = jnp.zeros(C)
+            if max_queue is not None:
+                out_c0 = (total_prev - done) + busy_m.sum(axis=0) \
+                    + held_m.sum(axis=0)
+                over = jnp.maximum(out_c0.sum() + arr_c.sum() - max_queue,
+                                   0.0)
+                order_t = drop_rank[t]
+                for rankc in range(C):
+                    c = order_t[rankc]
+                    d = jnp.minimum(arr_c[c], over)
+                    drop = drop.at[c].add(d)
+                    over = over - d
+            adm_c = arr_c - drop
+            new_total = total_prev + adm_c
+            Acum = jnp.where(col[None, :] >= t + 1, new_total[:, None], Acum)
+
+            served_bin = 0.0
+            pre_n = 0.0
+            pre_w = 0.0
+            sub_split, sub_bt, sub_served = [], [], []
+            for _ in range(n_sub):                 # static unroll
+                slot_split_i, slot_bt_i, slot_served_i = [], [], []
+                for p in order:                    # static drain order
+                    n_rep = jnp.maximum(ready[p], 0.0)
+                    has = n_rep > 0
+                    tau = dt_sub
+                    comp_m = jnp.zeros(C)
+                    comp_btw = 0.0
+                    hk = head_key(Acum, done)
+                    bm, bw, bk = busy_m[p], busy_w[p], busy_k[p]
+                    hm, hw, hkey = held_m[p], held_w[p], held_k[p]
+                    if preemptive:
+                        pr = (bw > 0.0) & (hk < bk)
+                        hm = hm + jnp.where(pr, bm, 0.0)
+                        hw = hw + jnp.where(pr, bw, 0.0)
+                        hkey = jnp.where(pr, jnp.maximum(hkey, bk), hkey)
+                        pre_n = pre_n + pr
+                        pre_w = pre_w + jnp.where(pr, bw, 0.0)
+                        bm = jnp.where(pr, 0.0, bm)
+                        bw = jnp.where(pr, 0.0, bw)
+                        bk = jnp.where(pr, -jnp.inf, bk)
+                    # progress the in-flight batch
+                    w = bw
+                    tau0 = tau
+                    fin = (w > 0.0) & (w <= tau0)
+                    run = w > tau0
+                    comp_m = comp_m + jnp.where(fin, bm, 0.0)
+                    comp_btw = comp_btw + jnp.where(
+                        fin, bm.sum() * ((dt_sub - tau0) + w), 0.0)
+                    bw = jnp.where(run, w - tau0, 0.0)
+                    bm = jnp.where(fin, jnp.zeros(C), bm)
+                    bk = jnp.where(fin, -jnp.inf, bk)
+                    tau = jnp.where(fin, tau0 - w,
+                                    jnp.where(run, 0.0, tau0))
+                    # resume a checkpoint, else form a new batch
+                    idle = bw == 0.0
+                    res = idle & (hw > 0.0) & (hk >= hkey)
+                    bm = jnp.where(res, hm, bm)
+                    bw = jnp.where(res, hw, bw)
+                    bk = jnp.where(res, hkey, bk)
+                    hm = jnp.where(res, jnp.zeros(C), hm)
+                    hw = jnp.where(res, 0.0, hw)
+                    hkey = jnp.where(res, -jnp.inf, hkey)
+
+                    backlog = (new_total - done).sum()
+                    form = idle & (~res) & (backlog > 0.0) & (tau > 0.0) \
+                        & has
+                    b = jnp.clip(jnp.where(has, jnp.ceil(
+                        backlog / jnp.where(has, n_rep, 1.0)), 0.0),
+                        1.0, max_b[p])
+                    bt_b = jnp.maximum(t_fixed[p] + b * t_unit[p], _EPS)
+                    amt = jnp.where(form, jnp.minimum(backlog, n_rep * b),
+                                    0.0)
+                    split, _ = pour(Acum, done, amt)
+                    done = done + split
+                    bm = jnp.where(form, split, bm)
+                    bw = jnp.where(form, bt_b, bw)
+                    # preemption rank = head key at formation (the numpy
+                    # engine's convention: rank by the batch's most urgent
+                    # cohort, so urgent mass is never checkpointed behind a
+                    # max-key resume gate)
+                    bk = jnp.where(form, hk, bk)
+                    # progress the resumed/formed batch
+                    w2 = bw
+                    tau0 = tau
+                    fin2 = (w2 > 0.0) & (w2 <= tau0)
+                    run2 = w2 > tau0
+                    comp_m = comp_m + jnp.where(fin2, bm, 0.0)
+                    comp_btw = comp_btw + jnp.where(
+                        fin2, bm.sum() * ((dt_sub - tau0) + w2), 0.0)
+                    bw = jnp.where(run2, w2 - tau0, 0.0)
+                    bm = jnp.where(fin2, jnp.zeros(C), bm)
+                    bk = jnp.where(fin2, -jnp.inf, bk)
+                    tau = jnp.where(fin2, tau0 - w2,
+                                    jnp.where(run2, 0.0, tau0))
+                    # fluid tail (the coarse within-bin convention)
+                    idle2 = bw == 0.0
+                    backlog2 = (new_total - done).sum()
+                    b2 = jnp.clip(jnp.where(has, jnp.ceil(
+                        backlog2 / jnp.where(has, n_rep, 1.0)), 0.0),
+                        1.0, max_b[p])
+                    bt2 = jnp.maximum(t_fixed[p] + b2 * t_unit[p], _EPS)
+                    tail = idle2 & (tau > 0.0) & has
+                    cap = jnp.where(tail, n_rep * b2 / bt2, 0.0) * tau
+                    amt2 = jnp.minimum(jnp.maximum(backlog2, 0.0), cap)
+                    split2, _ = pour(Acum, done, amt2)
+                    done = done + split2
+                    pour_tot = split2.sum()
+                    comp_tot = comp_m.sum()
+                    busy_m = busy_m.at[p].set(bm)
+                    busy_w = busy_w.at[p].set(bw)
+                    busy_k = busy_k.at[p].set(bk)
+                    held_m = held_m.at[p].set(hm)
+                    held_w = held_w.at[p].set(hw)
+                    held_k = held_k.at[p].set(hkey)
+                    slot_split_i.append(comp_m)
+                    slot_split_i.append(split2)
+                    slot_bt_i.append(jnp.where(
+                        comp_tot > 0,
+                        comp_btw / jnp.where(comp_tot > 0, comp_tot, 1.0),
+                        0.0))
+                    slot_bt_i.append(jnp.where(pour_tot > 0.0,
+                                               (dt_sub - tau) + bt2, 0.0))
+                    slot_served_i.append(comp_tot)
+                    slot_served_i.append(pour_tot)
+                    served_bin = served_bin + comp_tot
+                    served_bin = served_bin + pour_tot
+                # fold sub-eps float residue once per substep (the numpy
+                # engine's _MASS_EPS behaviour)
+                done = jnp.where(new_total - done <= 1e-9 + 1e-12 * new_total,
+                                 new_total, done)
+                sub_split.append(jnp.stack(slot_split_i))   # (2P, C)
+                sub_bt.append(jnp.stack(slot_bt_i))
+                sub_served.append(jnp.stack(slot_served_i))
+
+            out_c = jnp.maximum(new_total - done, 0.0) + busy_m.sum(axis=0) \
+                + held_m.sum(axis=0)
+            queue = out_c.sum()
+            capacity = 0.0
+            for p in range(P):
+                capacity = capacity + jnp.maximum(ready[p], 0.0) \
+                    * tput[p] * dt
+            util = jnp.where(capacity > 0, served_bin / capacity, 0.0)
+            util = jnp.minimum(util, 1.0)
+            from repro.fleet.kernels import KernelObs
+            obs = KernelObs(
+                t_s=(t + 1) * dt, dt_s=dt, arrival_rate=rate_sum,
+                queue=queue, replicas=ready.sum(),
+                in_flight=in_flight.sum(), utilization=util,
+                pool_replicas=ready, pool_in_flight=in_flight,
+                class_queue=out_c, class_arrival_rate=rate_c,
+                min_replicas=min_rep, max_replicas=max_rep)
+            pool_rep = ready
+            pstate, target = kernel.step(kp, pstate, obs)
+            target = jnp.clip(target, min_rep, max_rep)
+
+            excess = jnp.maximum(ready + in_flight - target, 0.0)
+            zero = jnp.int32(0)
+            window = lax.dynamic_slice(pend, (t + 1, zero), (W, P))
+            newer = jnp.cumsum(window[::-1, :], axis=0)[::-1, :] - window
+            cut = jnp.clip(excess[None, :] - newer, 0.0, window)
+            window = window - cut
+            canceled = cut.sum(axis=0)
+            pend = lax.dynamic_update_slice(pend, window, (t + 1, zero))
+            in_flight = in_flight - canceled
+            ready = jnp.maximum(ready - (excess - canceled), 0.0)
+            grow = jnp.maximum(target - ready - in_flight, 0.0)
+            pend = pend.at[t + 1 + jb_t, jnp.arange(P)].add(grow)
+            in_flight = in_flight + grow
+            billed = pool_rep + in_flight
+            residue = busy_w.sum() + held_w.sum()
+
+            ys = {"slot_split": jnp.stack(sub_split),    # (n_sub, 2P, C)
+                  "slot_bt": jnp.stack(sub_bt),          # (n_sub, 2P)
+                  "slot_served": jnp.stack(sub_served),  # (n_sub, 2P)
+                  "served_bin": served_bin,
+                  "admitted_c": adm_c, "dropped_c": drop,
+                  "queue_c": out_c, "pool_rep": pool_rep,
+                  "billed": billed, "util": util,
+                  "pre_n": pre_n, "pre_w": pre_w, "residue": residue}
+            return (ready, in_flight, pend, done, Acum, busy_m, busy_w,
+                    busy_k, held_m, held_w, held_k, pstate), ys
+
+        carry0 = (init_ready, jnp.zeros(P), jnp.zeros((Tpad, P)),
+                  jnp.zeros(C), jnp.zeros((C, T + 1)),
+                  jnp.zeros((P, C)), jnp.zeros(P), jnp.full(P, -jnp.inf),
+                  jnp.zeros((P, C)), jnp.zeros(P), jnp.full(P, -jnp.inf),
+                  kernel.init())
+        xs = (arr, rate, rate_sum, jb, jnp.arange(T, dtype=jnp.int32))
+        _, ys = lax.scan(step, carry0, xs)
+        return ys
+
+    core_one = sim_one if n_sub == 1 and not preemptive else sim_one_fine
+    over_seeds = jax.vmap(core_one,
                           in_axes=(0, 0, 0, 0, None, None, None, None, None,
-                                   None, None))
+                                   None, None, None))
     over_cands = jax.vmap(over_seeds,
                           in_axes=(None, None, None, None, 0, 0, 0, 0, 0, 0,
-                                   0))
+                                   0, 0))
     return jax.jit(over_cands)
 
 
@@ -229,7 +488,8 @@ def _pad_pow2(n: int) -> int:
 
 def run_dynamics(kernel, *, arrivals, jb, dt, order, t_fixed, t_unit, max_b,
                  max_queue, tables, kp, min_rep, max_rep, init_ready,
-                 max_cold_bins) -> dict:
+                 max_cold_bins, tput=(), n_substeps: int = 1,
+                 preemptive: bool = False) -> dict:
     """Run the compiled dynamics for a stacked batch of candidates against a
     shared seed batch; one jitted dispatch covers the whole lattice.
 
@@ -263,7 +523,9 @@ def run_dynamics(kernel, *, arrivals, jb, dt, order, t_fixed, t_unit, max_b,
         t_fixed=tuple(float(v) for v in t_fixed),
         t_unit=tuple(float(v) for v in t_unit),
         max_b=tuple(float(v) for v in max_b),
-        max_queue=None if max_queue is None else float(max_queue))
+        max_queue=None if max_queue is None else float(max_queue),
+        n_substeps=int(n_substeps), preemptive=bool(preemptive),
+        tput=tuple(float(v) for v in tput))
     # host-side divisions: XLA folds constant divisors into inexact
     # reciprocal multiplies, but policy ceil()s must see the exact IEEE
     # quotients the numpy reference sees
@@ -281,7 +543,7 @@ def run_dynamics(kernel, *, arrivals, jb, dt, order, t_fixed, t_unit, max_b,
         with enable_x64():
             out = core(arrivals, rate, rate_sum, np.asarray(jb, np.int32),
                        pad(tables["cnt"]), pad(tables["cls_of_rank"]),
-                       pad(tables["drop_rank"]),
+                       pad(tables["drop_rank"]), pad(tables["key_of_rank"]),
                        {k: pad(v) for k, v in kp.items()},
                        pad(np.asarray(min_rep, np.float64)),
                        pad(np.asarray(max_rep, np.float64)),

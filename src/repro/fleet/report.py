@@ -39,6 +39,7 @@ class ClassReport:
     slo_s: float
     share: float                # fraction of total arrivals
     p50_s: float
+    p95_s: float
     p99_s: float
     attainment: float
     drop_rate: float
@@ -74,7 +75,8 @@ class FleetReport:
 
     def row(self) -> list:
         return [self.policy, self.trace, self.shape,
-                fmt_time(self.p50_s), fmt_time(self.p99_s),
+                fmt_time(self.p50_s), fmt_time(self.p95_s),
+                fmt_time(self.p99_s),
                 f"{self.slo_attainment * 100:.1f}%",
                 f"{self.mean_utilization * 100:.0f}%",
                 f"{self.drop_rate * 100:.2f}%",
@@ -82,8 +84,8 @@ class FleetReport:
                 f"${self.usd_per_hour:.2f}/hr"]
 
 
-REPORT_HEADERS = ["policy", "trace", "shape", "p50", "p99", "SLO", "util",
-                  "drop", "replicas", "cost"]
+REPORT_HEADERS = ["policy", "trace", "shape", "p50", "p95", "p99", "SLO",
+                  "util", "drop", "replicas", "cost"]
 
 
 def _class_reports(sim: SimResult, total_arrived: float) -> tuple:
@@ -99,6 +101,7 @@ def _class_reports(sim: SimResult, total_arrived: float) -> tuple:
             name=rc.name, slo_s=rc.slo_s,
             share=arrived / max(total_arrived, 1.0),
             p50_s=weighted_percentile(vals, weights, 50),
+            p95_s=weighted_percentile(vals, weights, 95),
             p99_s=weighted_percentile(vals, weights, 99),
             attainment=(float(sim.class_ok[:, :, c].sum() / completed)
                         if completed > 0 else 1.0),
@@ -193,7 +196,7 @@ def cost_efficiency_table(reports: list, min_attainment: float = 0.99) -> str:
 
 
 CLASS_HEADERS = ["policy", "discipline", "trace", "class", "SLO", "share",
-                 "p50", "p99", "attainment", "drop", "cost"]
+                 "p50", "p95", "p99", "attainment", "drop", "cost"]
 
 
 def class_table(reports: list) -> str:
@@ -203,11 +206,12 @@ def class_table(reports: list) -> str:
     rows = []
     for r in sorted(reports, key=lambda r: (r.trace, r.discipline, r.policy)):
         for c in (r.class_reports
-                  or (ClassReport("all", r.slo_s, 1.0, r.p50_s, r.p99_s,
-                                  r.slo_attainment, r.drop_rate),)):
+                  or (ClassReport("all", r.slo_s, 1.0, r.p50_s, r.p95_s,
+                                  r.p99_s, r.slo_attainment, r.drop_rate),)):
             rows.append([r.policy, r.discipline, r.trace, c.name,
                          fmt_time(c.slo_s), f"{c.share * 100:.0f}%",
-                         fmt_time(c.p50_s), fmt_time(c.p99_s),
+                         fmt_time(c.p50_s), fmt_time(c.p95_s),
+                         fmt_time(c.p99_s),
                          f"{c.attainment * 100:.2f}%",
                          f"{c.drop_rate * 100:.2f}%",
                          f"${r.usd_per_hour:.2f}/hr"])

@@ -184,6 +184,13 @@ class SimResult:
     class_ok: np.ndarray = field(repr=False, default=None)
     # per-class exact sojourn distributions: ((values, weights), ...):
     class_sojourns: tuple = field(repr=False, default=())
+    # fidelity knobs of the run (coarse bin-granular core: 1 / False):
+    n_substeps: int = 1
+    preemptive: bool = False
+    # substep-core extras, (n_seeds, n_bins) or None on the coarse core:
+    preemptions: np.ndarray = field(repr=False, default=None)
+    preempted_work: np.ndarray = field(repr=False, default=None)  # batch-s
+    residue_work: np.ndarray = field(repr=False, default=None)    # batch-s
 
     @property
     def classes(self) -> tuple:
@@ -276,34 +283,55 @@ def draw_cold_start_delays(pools, n_seeds: int, n_bins: int, dt_s: float,
 
 def _assemble_result(workload, fleet: FleetConfig, disc, policy_name: str,
                      order, slos, admitted, cls, rec, pool_rep, pool_billed,
-                     slot_served, slot_class, slot_bt) -> SimResult:
+                     slot_served, slot_class, slot_bt, *,
+                     n_substeps: int = 1, preemptive: bool = False,
+                     slot_order=None, admitted_fine=None,
+                     extras=None) -> SimResult:
     """Exact per-request latency + SimResult from the dynamics arrays — the
     post-loop half of the simulation, shared by the numpy and JAX backends
     (the compiled path reproduces the *dynamics*; this accounting is common).
 
-    Slots are (bin, drain-rank) pairs, time-ordered, matching how the queue
-    head was assigned; within a class every discipline serves FIFO, so the
-    per-class cumulative served counts recover exact sojourns."""
+    Slots are (substep, drain-rank) pairs, time-ordered, matching how the
+    queue head was assigned; within a class every discipline serves FIFO, so
+    the per-class cumulative served counts recover exact sojourns. On the
+    coarse core a substep is a whole bin and slots are (bin, pool drain
+    rank); the substep core subdivides each bin into ``n_substeps``
+    micro-steps of ``M = slot_served.shape[2]`` slots each (a completion +
+    a fluid-pour slot per pool), with ``slot_order`` naming each slot rank's
+    pool and ``admitted_fine`` placing admissions at substep granularity."""
     trace = workload.total_trace()
     S, T = admitted.shape
     P = fleet.n_pools
+    n = int(n_substeps)
+    M = slot_served.shape[2]        # slots per substep (P coarse, 2P fine)
+    U = T * n                       # total substeps
     dt = trace.dt_s
-    slot_bin = np.repeat(np.arange(T), P)
-    flat_bt = slot_bt.reshape(S, T * P)
-    cms = multiclass_cohort_metrics(cls["admitted"], slot_class, slot_bin,
-                                    flat_bt, dt, slos)
-    class_ok = np.stack([cm.ok_served.reshape(S, T, P).sum(axis=2)
+    dt_sub = dt / n
+    if slot_order is None:
+        slot_order = list(order)
+    adm_fine = cls["admitted"] if admitted_fine is None else admitted_fine
+    slot_bin = np.repeat(np.arange(U), M)
+    flat_bt = slot_bt.reshape(S, U * M)
+    cms = multiclass_cohort_metrics(adm_fine, slot_class, slot_bin,
+                                    flat_bt, dt_sub, slos)
+    class_ok = np.stack([cm.ok_served.reshape(S, T, n * M).sum(axis=2)
                          for cm in cms], axis=2)
     C = len(cms)
-    class_served = slot_class.reshape(S, T, P, C).sum(axis=2)
-    # per-bin mean sojourn pooled over classes and drain ranks
-    mass_soj = sum((cm.mean_sojourn * slot_class[:, :, c]).reshape(S, T, P)
-                   .sum(axis=2) for c, cm in enumerate(cms))
+    class_served = slot_class.reshape(S, T, n * M, C).sum(axis=2)
+    # per-bin mean sojourn pooled over classes and slots
+    mass_soj = sum((cm.mean_sojourn * slot_class[:, :, c])
+                   .reshape(S, T, n * M).sum(axis=2)
+                   for c, cm in enumerate(cms))
     served_all = rec["served"]
     lat = np.divide(mass_soj, served_all,
                     out=np.zeros((S, T)), where=served_all > 0)
     # slots are drain-rank-ordered; report per-pool served in pool order
-    rank_of = np.argsort(np.asarray(order))
+    su = slot_served.reshape(S, T, n * M)
+    pool_served = np.stack(
+        [su[:, :, [i * M + r for i in range(n)
+                   for r, q in enumerate(slot_order) if q == p]].sum(axis=2)
+         for p in range(P)], axis=2)
+    extras = extras or {}
 
     result = SimResult(
         trace=trace, fleet=fleet, policy_name=policy_name,
@@ -313,7 +341,7 @@ def _assemble_result(workload, fleet: FleetConfig, disc, policy_name: str,
         replicas=rec["replicas"], billed_replicas=rec["billed"],
         latency_s=lat, ok_served=class_ok.sum(axis=2),
         utilization=rec["util"], pool_replicas=pool_rep,
-        pool_billed=pool_billed, pool_served=slot_served[:, :, rank_of],
+        pool_billed=pool_billed, pool_served=pool_served,
         sojourn_values=np.concatenate([cm.sojourn_values for cm in cms]),
         sojourn_weights=np.concatenate([cm.sojourn_weights for cm in cms]),
         workload=workload, discipline=disc.name,
@@ -321,12 +349,16 @@ def _assemble_result(workload, fleet: FleetConfig, disc, policy_name: str,
         class_dropped=cls["dropped"], class_queue=cls["queue"],
         class_ok=class_ok,
         class_sojourns=tuple((cm.sojourn_values, cm.sojourn_weights)
-                             for cm in cms))
+                             for cm in cms),
+        n_substeps=n, preemptive=bool(preemptive),
+        preemptions=extras.get("preemptions"),
+        preempted_work=extras.get("preempted_work"),
+        residue_work=extras.get("residue_work"))
     # Both backends funnel their dynamics through this one assembly path, so
     # an active telemetry session sees identical streams from either; the
     # hook only *reads* the finished result (no-op when disabled).
     telemetry.record(result, slot_bt=slot_bt, slot_served=slot_served,
-                     order=order)
+                     order=slot_order)
     return result
 
 
@@ -362,7 +394,8 @@ def simulate_fleet(workload, fleet: FleetConfig, policy, *,
                    slo_s: float = None, max_queue: float = None,
                    discipline="fifo", cold_start_seed: int = 0,
                    seed_indices=None, backend: str = "numpy",
-                   cold_start_delays=None) -> SimResult:
+                   cold_start_delays=None, n_substeps: int = 1,
+                   preemptive: bool = False) -> SimResult:
     """Run ``policy`` against a ``Workload`` (or bare ``Trace``) on a
     heterogeneous ``fleet``.
 
@@ -397,6 +430,18 @@ def simulate_fleet(workload, fleet: FleetConfig, policy, *,
     kernel), or ``"auto"`` (compiled when possible, numpy otherwise). Both
     backends produce the same ``SimResult`` up to float rounding; the exact
     per-request latency accounting is shared.
+
+    ``n_substeps`` / ``preemptive`` pick the simulator fidelity.
+    ``n_substeps=1`` with ``preemptive=False`` (the default) is the coarse
+    bin-granular fluid core — byte-identical to earlier revisions on both
+    backends. ``n_substeps > 1`` subdivides every bin into that many
+    micro-steps and switches to the substep engine: batch service becomes an
+    explicit checkpoint-resume residue (in-flight work survives bin
+    boundaries and scale-downs), and with ``preemptive=True`` a strictly
+    lower-keyed head-of-queue cohort interrupts a running batch at substep
+    boundaries (EDF / strict priority; FIFO keys never outrank a running
+    batch, so FIFO is unaffected). Policies observe bin-aggregated signals
+    either way.
     """
     if isinstance(workload, Trace):
         if slo_s is None:
@@ -405,6 +450,9 @@ def simulate_fleet(workload, fleet: FleetConfig, policy, *,
     elif slo_s is not None:
         raise ValueError("slo_s comes from the Workload's RequestClasses; "
                          "pass one or the other, not both")
+    n_substeps = int(n_substeps)
+    if n_substeps < 1:
+        raise ValueError(f"n_substeps must be >= 1, got {n_substeps}")
     disc = get_discipline(discipline)
     classes = workload.classes
     C = len(classes)
@@ -440,7 +488,12 @@ def simulate_fleet(workload, fleet: FleetConfig, policy, *,
     backend, kernel = _resolve_backend(backend, fleet, policy, classes)
     if backend == "jax":
         return _simulate_fleet_jax(workload, fleet, policy, kernel, disc,
-                                   order, slos, max_queue, cs_delay)
+                                   order, slos, max_queue, cs_delay,
+                                   n_substeps, preemptive)
+    if n_substeps > 1 or preemptive:
+        return _simulate_fleet_substep(workload, fleet, policy, disc, order,
+                                       slos, max_queue, cs_delay, n_substeps,
+                                       preemptive)
     svc_terms = [(p.service.t_fixed, p.service.t_per_unit,
                   float(p.service.max_batch)) for p in pools]
 
@@ -573,6 +626,314 @@ def simulate_fleet(workload, fleet: FleetConfig, policy, *,
                             slot_served, slot_class, slot_bt)
 
 
+def _simulate_fleet_substep(workload, fleet: FleetConfig, policy, disc,
+                            order, slos, max_queue, cs_delay,
+                            n_substeps: int, preemptive: bool) -> SimResult:
+    """Fine-Δt numpy engine: every wall-clock bin subdivided into
+    ``n_substeps`` micro-steps with checkpoint-resume batch service.
+
+    Unlike the coarse loop (fluid service: a slot's pour departs within its
+    own bin), a batch here is an explicit unit of in-flight work: it is
+    poured once — a covering-prefix over the discipline's static serve-order
+    tables, the *same* rule the compiled backend bisects
+    (``discipline.table_pour``) — then carries a work-remaining residue
+    across substeps and departs only when that residue hits zero. Under
+    ``preemptive=True`` a strictly lower-keyed head-of-queue cohort
+    interrupts the running batch at a substep boundary: the batch
+    checkpoints (mass + remaining work + key) and resumes once no queued
+    cohort outranks it. Scale-downs never kill in-flight work (connection
+    draining): a shrunk pool still finishes its running batch. When a batch
+    completes with substep budget to spare, the leftover drains the queue
+    fluidly at the pool's instantaneous rate — the coarse within-bin
+    convention, so short-batch regimes keep coarse-like throughput while
+    long batches get honest head-of-line blocking.
+
+    The policy's decision cadence, the scale-down water-fill, the
+    pending-launch ledger and billing are the coarse loop's verbatim; it
+    observes bin-aggregated signals. The reported queue is *outstanding*
+    work (admitted - departed: waiting + in-flight + checkpointed mass), so
+    served + dropped + terminal queue == arrivals stays exact.
+
+    Every per-substep float op mirrors the compiled substep core's operation
+    order one-for-one; the two are pinned bit-exact in the tests.
+    """
+    from repro.fleet.discipline import (cohort_tables, table_head_key,
+                                        table_pour)
+
+    trace = workload.total_trace()
+    classes = workload.classes
+    C = len(classes)
+    pools = fleet.pools
+    P = len(pools)
+    S, T = trace.arrivals.shape
+    dt = trace.dt_s
+    n = int(n_substeps)
+    dt_sub = dt / n
+    tables = cohort_tables(disc, classes, T, dt)
+    cold_bins, scan_bins, jittered, _, _ = _cold_start_plan(pools, dt)
+    max_cb = max(scan_bins)
+    svc_terms = [(p.service.t_fixed, p.service.t_per_unit,
+                  float(p.service.max_batch)) for p in pools]
+    tput = [p.service.max_throughput for p in pools]
+
+    policy.reset(S)
+    ready = np.zeros((S, P))
+    for p, pc in enumerate(pools):
+        ready[:, p] = _initial_replicas(pc, trace.rate[0], p == order[0])
+    arrivals_c = workload.arrivals.astype(float)
+    pend = np.zeros((S, T + max_cb + 2, P))
+    in_flight = np.zeros((S, P))
+
+    # queue state: cumulative-admitted curves + poured totals (the compiled
+    # backend's representation — both engines pour via the same tables)
+    Acum = np.zeros((S, C, T + 1))
+    done = np.zeros((S, C))
+    # in-flight batch per pool: mass split, remaining work, preemption key
+    busy_mass = np.zeros((S, P, C))
+    busy_work = np.zeros((S, P))
+    busy_key = np.full((S, P), -np.inf)
+    # checkpointed (preempted) batch per pool
+    held_mass = np.zeros((S, P, C))
+    held_work = np.zeros((S, P))
+    held_key = np.full((S, P), -np.inf)
+
+    U = T * n
+    M = 2 * P            # per substep: a completion + a pour slot per pool
+    slot_served = np.zeros((S, U, M))
+    slot_class = np.zeros((S, U * M, C))
+    slot_bt = np.zeros((S, U, M))
+    admitted_fine = np.zeros((S, U, C))
+    admitted = np.zeros((S, T))
+    cls = {k: np.zeros((S, T, C)) for k in ("admitted", "dropped", "queue")}
+    rec = {k: np.zeros((S, T)) for k in
+           ("served", "dropped", "queue", "replicas", "billed", "util")}
+    pool_rep = np.zeros((S, T, P))
+    pool_billed = np.zeros((S, T, P))
+    pre_n = np.zeros((S, T))
+    pre_w = np.zeros((S, T))
+    residue = np.zeros((S, T))
+
+    for t in range(T):
+        matured = pend[:, t, :]
+        ready += matured
+        in_flight -= matured
+        arr_c = arrivals_c[:, t, :]
+        arr = arr_c.sum(axis=1)
+        total_prev = Acum[:, :, T]
+        drop_c = np.zeros((S, C))
+        if max_queue is not None:
+            # admission control bounds *outstanding* work: waiting mass plus
+            # whatever is in flight or checkpointed on the pools
+            out_c = (total_prev - done) + busy_mass.sum(axis=1) \
+                + held_mass.sum(axis=1)
+            over = np.maximum(out_c.sum(axis=1) + arr - max_queue, 0.0)
+            for c in tables["drop_rank"][t]:
+                d = np.minimum(arr_c[:, c], over)
+                drop_c[:, c] = d
+                over = over - d
+        adm_c = arr_c - drop_c
+        new_total = total_prev + adm_c
+        Acum[:, :, t + 1:] = new_total[:, :, None]
+        admitted[:, t] = adm_c.sum(axis=1)
+        admitted_fine[:, t * n, :] = adm_c
+        cls["admitted"][:, t, :] = adm_c
+        cls["dropped"][:, t, :] = drop_c
+        drop = drop_c.sum(axis=1)
+
+        served_bin = np.zeros(S)
+        for i in range(n):
+            u = t * n + i
+            for rank, p in enumerate(order):
+                t_fixed, t_unit, max_b = svc_terms[p]
+                n_rep = np.maximum(ready[:, p], 0.0)
+                has = n_rep > 0
+                tau = np.full(S, dt_sub)
+                comp_m = np.zeros((S, C))
+                comp_btw = np.zeros(S)
+                hk = table_head_key(Acum, done, tables)
+                if preemptive:
+                    pr = (busy_work[:, p] > 0.0) & (hk < busy_key[:, p])
+                    held_mass[:, p] += np.where(pr[:, None],
+                                                busy_mass[:, p], 0.0)
+                    held_work[:, p] += np.where(pr, busy_work[:, p], 0.0)
+                    held_key[:, p] = np.where(
+                        pr, np.maximum(held_key[:, p], busy_key[:, p]),
+                        held_key[:, p])
+                    pre_n[:, t] += pr
+                    pre_w[:, t] += np.where(pr, busy_work[:, p], 0.0)
+                    busy_mass[:, p] = np.where(pr[:, None], 0.0,
+                                               busy_mass[:, p])
+                    busy_work[:, p] = np.where(pr, 0.0, busy_work[:, p])
+                    busy_key[:, p] = np.where(pr, -np.inf, busy_key[:, p])
+                # progress the in-flight batch (.copy(): the slice is a view
+                # of busy_work, which is updated before tau reads w)
+                w = busy_work[:, p].copy()
+                tau0 = tau
+                fin = (w > 0.0) & (w <= tau0)
+                run = w > tau0
+                comp_m += np.where(fin[:, None], busy_mass[:, p], 0.0)
+                comp_btw += np.where(
+                    fin,
+                    busy_mass[:, p].sum(axis=1) * ((dt_sub - tau0) + w),
+                    0.0)
+                busy_work[:, p] = np.where(run, w - tau0, 0.0)
+                busy_mass[:, p] = np.where(fin[:, None], 0.0,
+                                           busy_mass[:, p])
+                busy_key[:, p] = np.where(fin, -np.inf, busy_key[:, p])
+                tau = np.where(fin, tau0 - w, np.where(run, 0.0, tau0))
+                # resume a checkpoint, else form a new batch from the queue
+                idle = busy_work[:, p] == 0.0
+                res = idle & (held_work[:, p] > 0.0) & (hk >= held_key[:, p])
+                busy_mass[:, p] = np.where(res[:, None], held_mass[:, p],
+                                           busy_mass[:, p])
+                busy_work[:, p] = np.where(res, held_work[:, p],
+                                           busy_work[:, p])
+                busy_key[:, p] = np.where(res, held_key[:, p],
+                                          busy_key[:, p])
+                held_mass[:, p] = np.where(res[:, None], 0.0,
+                                           held_mass[:, p])
+                held_work[:, p] = np.where(res, 0.0, held_work[:, p])
+                held_key[:, p] = np.where(res, -np.inf, held_key[:, p])
+
+                backlog = (new_total - done).sum(axis=1)
+                form = idle & (~res) & (backlog > 0.0) & (tau > 0.0) & has
+                b = np.clip(np.where(has, np.ceil(
+                    backlog / np.where(has, n_rep, 1.0)), 0.0), 1.0, max_b)
+                bt_b = np.maximum(t_fixed + b * t_unit, _EPS)
+                amt = np.where(form, np.minimum(backlog, n_rep * b), 0.0)
+                split, _ = table_pour(Acum, done, amt, tables)
+                done = done + split
+                busy_mass[:, p] = np.where(form[:, None], split,
+                                           busy_mass[:, p])
+                busy_work[:, p] = np.where(form, bt_b, busy_work[:, p])
+                # the batch's preemption rank is its *head* key — the most
+                # urgent cohort it swept up. Ranking by the largest key
+                # touched would let a fresh urgent arrival preempt a batch
+                # that itself carries urgent mass, checkpointing that mass
+                # behind an unresumable max-key gate (priority inversion)
+                busy_key[:, p] = np.where(form, hk, busy_key[:, p])
+                # progress the resumed/formed batch with the leftover budget
+                w2 = busy_work[:, p].copy()
+                tau0 = tau
+                fin2 = (w2 > 0.0) & (w2 <= tau0)
+                run2 = w2 > tau0
+                comp_m += np.where(fin2[:, None], busy_mass[:, p], 0.0)
+                comp_btw += np.where(
+                    fin2,
+                    busy_mass[:, p].sum(axis=1) * ((dt_sub - tau0) + w2),
+                    0.0)
+                busy_work[:, p] = np.where(run2, w2 - tau0, busy_work[:, p])
+                busy_work[:, p] = np.where(fin2, 0.0, busy_work[:, p])
+                busy_mass[:, p] = np.where(fin2[:, None], 0.0,
+                                           busy_mass[:, p])
+                busy_key[:, p] = np.where(fin2, -np.inf, busy_key[:, p])
+                tau = np.where(fin2, tau0 - w2, np.where(run2, 0.0, tau0))
+                # fluid tail: an idle pool's leftover budget drains the
+                # queue at its instantaneous rate (the coarse convention)
+                idle2 = busy_work[:, p] == 0.0
+                backlog2 = (new_total - done).sum(axis=1)
+                b2 = np.clip(np.where(has, np.ceil(
+                    backlog2 / np.where(has, n_rep, 1.0)), 0.0), 1.0, max_b)
+                bt2 = np.maximum(t_fixed + b2 * t_unit, _EPS)
+                tail = idle2 & (tau > 0.0) & has
+                cap = np.where(tail, n_rep * b2 / bt2, 0.0) * tau
+                amt2 = np.minimum(np.maximum(backlog2, 0.0), cap)
+                split2, _ = table_pour(Acum, done, amt2, tables)
+                done = done + split2
+                pour_tot = split2.sum(axis=1)
+                comp_tot = comp_m.sum(axis=1)
+                k0 = u * M + 2 * rank
+                slot_class[:, k0, :] = comp_m
+                slot_served[:, u, 2 * rank] = comp_tot
+                # completion slot bt = mass-weighted elapsed time within the
+                # substep, so sojourns include pause delays exactly
+                slot_bt[:, u, 2 * rank] = np.divide(
+                    comp_btw, comp_tot, out=np.zeros(S),
+                    where=comp_tot > 0)
+                slot_class[:, k0 + 1, :] = split2
+                slot_served[:, u, 2 * rank + 1] = pour_tot
+                slot_bt[:, u, 2 * rank + 1] = np.where(
+                    pour_tot > 0.0, (dt_sub - tau) + bt2, 0.0)
+                served_bin = served_bin + comp_tot
+                served_bin = served_bin + pour_tot
+            # fold sub-eps float residue of a drained class (the coarse
+            # loop's _MASS_EPS behaviour, applied once per substep)
+            done = np.where(new_total - done <= 1e-9 + 1e-12 * new_total,
+                            new_total, done)
+
+        out_c = np.maximum(new_total - done, 0.0) + busy_mass.sum(axis=1) \
+            + held_mass.sum(axis=1)
+        queue = out_c.sum(axis=1)
+        cls["queue"][:, t, :] = out_c
+        pool_rep[:, t, :] = ready
+        n_ready = ready.sum(axis=1)
+        # completions are lumpy at substep granularity, so utilization is
+        # served over the pools' nameplate throughput, clipped to 1
+        capacity = np.zeros(S)
+        for p in range(P):
+            capacity = capacity + np.maximum(ready[:, p], 0.0) \
+                * tput[p] * dt
+        util = np.divide(served_bin, capacity, out=np.zeros(S),
+                         where=capacity > 0)
+        util = np.minimum(util, 1.0)
+        obs = FleetObs(
+            t_s=(t + 1) * dt, dt_s=dt, arrival_rate=arr / dt, queue=queue,
+            replicas=n_ready, in_flight=in_flight.sum(axis=1),
+            utilization=util,
+            service=pools[0].service, pool_replicas=pool_rep[:, t, :],
+            pool_in_flight=in_flight.copy(), pools=pools,
+            class_queue=out_c, class_arrival_rate=arr_c / dt,
+            classes=classes)
+        target = np.asarray(policy.decide(t, obs), float)
+        if target.ndim == 1:
+            target = target[:, None]
+
+        for p, pc in enumerate(pools):
+            tg = np.clip(target[:, p], pc.min_replicas, pc.max_replicas)
+            excess = np.maximum(ready[:, p] + in_flight[:, p] - tg, 0.0)
+            if excess.any():
+                for j in range(min(t + 1 + scan_bins[p], T + max_cb + 1),
+                               t, -1):
+                    col = pend[:, j, p]
+                    if not col.any():
+                        continue
+                    cut = np.minimum(col, excess)
+                    pend[:, j, p] = col - cut
+                    in_flight[:, p] -= cut
+                    excess -= cut
+                    if not excess.any():
+                        break
+                ready[:, p] = np.maximum(ready[:, p] - excess, 0.0)
+            grow = np.maximum(tg - ready[:, p] - in_flight[:, p], 0.0)
+            if jittered[p]:
+                jb = np.clip(np.rint(cs_delay[:, t, p] / dt).astype(int), 0,
+                             scan_bins[p])
+                idx = np.minimum(t + 1 + jb, T + max_cb + 1)
+                pend[np.arange(S), idx, p] += grow
+            else:
+                pend[:, min(t + 1 + cold_bins[p], T + max_cb + 1), p] += grow
+            in_flight[:, p] += grow
+            pool_billed[:, t, p] = obs.pool_replicas[:, p] + in_flight[:, p]
+
+        rec["served"][:, t] = served_bin
+        rec["dropped"][:, t] = drop
+        rec["queue"][:, t] = queue
+        rec["replicas"][:, t] = n_ready
+        rec["billed"][:, t] = pool_billed[:, t, :].sum(axis=1)
+        rec["util"][:, t] = util
+        residue[:, t] = busy_work.sum(axis=1) + held_work.sum(axis=1)
+
+    extras = {"preemptions": pre_n, "preempted_work": pre_w,
+              "residue_work": residue}
+    slot_order = [q for q in order for _ in range(2)]
+    return _assemble_result(workload, fleet, disc, policy.name, order, slos,
+                            admitted, cls, rec, pool_rep, pool_billed,
+                            slot_served, slot_class, slot_bt,
+                            n_substeps=n, preemptive=preemptive,
+                            slot_order=slot_order,
+                            admitted_fine=admitted_fine, extras=extras)
+
+
 def _dynamics_inputs(workload, fleet: FleetConfig, order, cs_delay):
     """Shared (candidate-independent) array inputs of the compiled backend:
     per-class arrivals, per-(seed, bin, pool) launch-landing offsets, and
@@ -598,6 +959,7 @@ def _dynamics_inputs(workload, fleet: FleetConfig, order, cs_delay):
         t_fixed=[p.service.t_fixed for p in pools],
         t_unit=[p.service.t_per_unit for p in pools],
         max_b=[float(p.service.max_batch) for p in pools],
+        tput=[p.service.max_throughput for p in pools],
         max_cold_bins=max(scan_bins))
 
 
@@ -613,28 +975,54 @@ def _candidate_arrays(fleet: FleetConfig, order, rate0: float):
 
 
 def _result_from_dynamics(workload, fleet: FleetConfig, disc, policy_name,
-                          order, slos, out) -> SimResult:
+                          order, slos, out, n_substeps: int = 1,
+                          preemptive: bool = False) -> SimResult:
     """Build a SimResult from one candidate's compiled-dynamics outputs
     (arrays with leading dims (S, T))."""
     S, T, C = out["admitted_c"].shape
     P = fleet.n_pools
     cls = {"admitted": out["admitted_c"], "dropped": out["dropped_c"],
            "queue": out["queue_c"]}
-    rec = {"served": out["slot_served"].sum(axis=2),
+    if n_substeps == 1 and not preemptive:
+        rec = {"served": out["slot_served"].sum(axis=2),
+               "dropped": out["dropped_c"].sum(axis=2),
+               "queue": out["queue_c"].sum(axis=2),
+               "replicas": out["pool_rep"].sum(axis=2),
+               "billed": out["billed"].sum(axis=2),
+               "util": out["util"]}
+        return _assemble_result(
+            workload, fleet, disc, policy_name, order, slos,
+            out["admitted_c"].sum(axis=2), cls, rec, out["pool_rep"],
+            out["billed"], out["slot_served"],
+            out["slot_split"].reshape(S, T * P, C), out["slot_bt"])
+    n = int(n_substeps)
+    M = 2 * P
+    U = T * n
+    rec = {"served": out["served_bin"],
            "dropped": out["dropped_c"].sum(axis=2),
            "queue": out["queue_c"].sum(axis=2),
            "replicas": out["pool_rep"].sum(axis=2),
            "billed": out["billed"].sum(axis=2),
            "util": out["util"]}
+    admitted_fine = np.zeros((S, U, C))
+    admitted_fine[:, ::n, :] = out["admitted_c"]
+    extras = {"preemptions": out["pre_n"], "preempted_work": out["pre_w"],
+              "residue_work": out["residue"]}
     return _assemble_result(
         workload, fleet, disc, policy_name, order, slos,
         out["admitted_c"].sum(axis=2), cls, rec, out["pool_rep"],
-        out["billed"], out["slot_served"],
-        out["slot_split"].reshape(S, T * P, C), out["slot_bt"])
+        out["billed"], out["slot_served"].reshape(S, U, M),
+        out["slot_split"].reshape(S, U * M, C),
+        out["slot_bt"].reshape(S, U, M),
+        n_substeps=n, preemptive=preemptive,
+        slot_order=[q for q in order for _ in range(2)],
+        admitted_fine=admitted_fine, extras=extras)
 
 
 def _simulate_fleet_jax(workload, fleet: FleetConfig, policy, kernel, disc,
-                        order, slos, max_queue, cs_delay) -> SimResult:
+                        order, slos, max_queue, cs_delay,
+                        n_substeps: int = 1,
+                        preemptive: bool = False) -> SimResult:
     """One policy on the compiled backend: the same batched core the tuner
     uses, with a single candidate."""
     from repro.fleet import jaxsim
@@ -647,13 +1035,15 @@ def _simulate_fleet_jax(workload, fleet: FleetConfig, policy, kernel, disc,
                                                      trace.rate[0])
     out = jaxsim.run_dynamics(
         kernel, **_dynamics_inputs(workload, fleet, order, cs_delay),
-        max_queue=max_queue,
+        max_queue=max_queue, n_substeps=n_substeps, preemptive=preemptive,
         tables={k: v[None] for k, v in tables.items()},
         kp={k: np.asarray([v]) for k, v in kernel.params_of(policy).items()},
         min_rep=min_rep[None], max_rep=max_rep[None],
         init_ready=init_ready[None])
     return _result_from_dynamics(workload, fleet, disc, policy.name, order,
-                                 slos, {k: v[0] for k, v in out.items()})
+                                 slos, {k: v[0] for k, v in out.items()},
+                                 n_substeps=n_substeps,
+                                 preemptive=preemptive)
 
 
 def simulate(workload, service: ServiceModel, policy, *,
@@ -661,11 +1051,13 @@ def simulate(workload, service: ServiceModel, policy, *,
              max_queue: float = None, initial_replicas: int = None,
              min_replicas: int = 0, max_replicas: int = 1024,
              discipline="fifo", cold_start_seed: int = 0,
-             seed_indices=None, backend: str = "numpy") -> SimResult:
+             seed_indices=None, backend: str = "numpy",
+             n_substeps: int = 1, preemptive: bool = False) -> SimResult:
     """Homogeneous fleet: run ``policy`` against a ``Trace`` or ``Workload``
     on replicas of ``service``. A thin wrapper over ``simulate_fleet`` with
     one pool. ``cold_start_s`` accepts the same constant-or-(mean, jitter)
-    spec as ``PoolConfig``."""
+    spec as ``PoolConfig``; ``n_substeps``/``preemptive`` pick the simulator
+    fidelity (see ``simulate_fleet``)."""
     # The policy may carry its own shape choice (predictive: recommend()).
     service = getattr(policy, "service", None) or service
     pool = PoolConfig(service=service, cold_start_s=cold_start_s,
@@ -674,4 +1066,5 @@ def simulate(workload, service: ServiceModel, policy, *,
     return simulate_fleet(workload, FleetConfig((pool,), max_queue=max_queue),
                           policy, slo_s=slo_s, discipline=discipline,
                           cold_start_seed=cold_start_seed,
-                          seed_indices=seed_indices, backend=backend)
+                          seed_indices=seed_indices, backend=backend,
+                          n_substeps=n_substeps, preemptive=preemptive)

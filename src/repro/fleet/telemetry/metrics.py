@@ -34,6 +34,11 @@ name                                  kind       labels
                                                  residual-monitor input)
 ``fleet_sojourn_seconds``             histogram  ``cls``
 ``fleet_batch_time_seconds``          histogram  ``pool``
+``fleet_preemptions_total``           counter    — (substep core only)
+``fleet_residue_bins``                counter    — (bins ending with
+                                                 in-flight/checkpointed work)
+``fleet_preempted_work``              series     — (batch-seconds preempted
+                                                 per bin; substep core only)
 ====================================  =========  ==============================
 
 Per-seed traces are reduced over the Monte Carlo axis before recording
@@ -285,6 +290,16 @@ def record_sim(registry: MetricsRegistry, sim, slot_bt=None, slot_served=None,
         sim.arrivals.mean(axis=0) / sim.dt_s)
     registry.series("fleet_utilization").extend(sim.utilization.mean(axis=0))
     registry.series("fleet_service_time_s").extend(service_time_stream(sim))
+
+    if sim.preemptions is not None:
+        # substep-core extras: how often the discipline interrupted a running
+        # batch, and how much work was carried across bins as residue
+        registry.counter("fleet_preemptions_total").inc(
+            float(sim.preemptions.sum()) / S)
+        registry.counter("fleet_residue_bins").inc(
+            float((sim.residue_work > 0.0).sum()) / S)
+        registry.series("fleet_preempted_work").extend(
+            sim.preempted_work.mean(axis=0))
 
     if slot_bt is not None and slot_served is not None and order is not None:
         # slot arrays are drain-rank ordered; label by the pool each rank is

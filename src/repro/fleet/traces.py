@@ -100,6 +100,40 @@ def replay_trace(rates_per_s, dt_s: float = 1.0, n_seeds: int = 8, seed: int = 0
     return _sample(name, np.asarray(rates_per_s, float), dt_s, n_seeds, seed)
 
 
+def resample_trace(trace: Trace, dt_s: float, seed: int = 0) -> Trace:
+    """Split a recorded trace onto a finer time grid without re-sampling its
+    Poisson draws.
+
+    Each coarse bin's sampled count is distributed over ``k = trace.dt_s /
+    dt_s`` fine bins by a seeded uniform multinomial — exactly the
+    conditional law of a Poisson stream given its bin total, so the fine
+    trace is a *refinement* of the same arrival realization, not a fresh
+    draw: per-seed totals are conserved to the request, and two calls with
+    the same ``seed`` split identically. This is what lets a coarse recorded
+    replay (e.g. the 60-second Azure profile) drive a fine-Δt simulator core
+    while staying paired with its coarse-core baseline.
+
+    ``dt_s`` must divide ``trace.dt_s`` to a whole number of fine bins;
+    ``k == 1`` returns the trace unchanged.
+    """
+    k_f = trace.dt_s / float(dt_s)
+    k = int(round(k_f))
+    if k < 1 or abs(k_f - k) > 1e-9 * max(k, 1):
+        raise ValueError(f"dt_s={dt_s} does not divide the trace's bin "
+                         f"width {trace.dt_s} into whole fine bins")
+    if k == 1:
+        return trace
+    rate = np.repeat(trace.rate, k)         # requests/s: value is unchanged
+    S, T = trace.arrivals.shape
+    fine = np.empty((S, T * k), dtype=trace.arrivals.dtype)
+    p = np.full(k, 1.0 / k)
+    for s in range(S):
+        rng = np.random.default_rng((seed, s))
+        fine[s] = rng.multinomial(trace.arrivals[s].astype(np.int64),
+                                  p).reshape(T * k)
+    return Trace(f"{trace.name}@{dt_s:g}s", float(dt_s), rate, fine)
+
+
 def load_trace_csv(path, rate_col=1, dt_s: float = 60.0, *, mean_rate_per_s:
                    float = None, n_seeds: int = 8, seed: int = 0,
                    name: str = None, delimiter: str = ",") -> Trace:

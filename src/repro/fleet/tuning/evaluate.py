@@ -134,6 +134,9 @@ class TuningScenario:
       one jitted candidate x seed batch), or ``"auto"`` (the default:
       compiled when the policy family has a kernel, numpy otherwise — every
       built-in family has one, and both paths agree to float rounding).
+    * ``n_substeps``/``preemptive`` — simulator fidelity knobs forwarded to
+      every ``simulate_fleet`` call (see the simulator docstring); the
+      defaults keep the coarse bin-granular core.
     """
     name: str
     workload: Workload
@@ -145,6 +148,8 @@ class TuningScenario:
     cold_start_seed: int = 0
     build_policy: Callable = None    # override: params -> Policy
     backend: str = "auto"
+    n_substeps: int = 1
+    preemptive: bool = False
 
     def __post_init__(self):
         if isinstance(self.workload, Trace):
@@ -231,7 +236,8 @@ class TuningScenario:
             max_queue=self.max_queue, cold_start_seed=self.cold_start_seed,
             seed_indices=np.arange(s0, s1),
             cold_start_delays=self._cs_rows(s0, s1),
-            backend=self.backend if backend is None else backend)
+            backend=self.backend if backend is None else backend,
+            n_substeps=self.n_substeps, preemptive=self.preemptive)
 
 
 def per_seed_metrics(sim: SimResult):
@@ -334,18 +340,20 @@ def _evaluate_batched(scenario: TuningScenario, candidates: list,
                                    scenario._cs_rows(s0, s1)),
         max_queue=max_queue,
         tables={k: np.stack([t[k] for t in tables])
-                for k in ("cnt", "cls_of_rank", "drop_rank")},
+                for k in ("cnt", "cls_of_rank", "drop_rank", "key_of_rank")},
         kp={k: np.array([r[k] for r in kp_rows])
             for k in kernel.param_names},
         min_rep=np.stack([b[0] for b in bounds]),
         max_rep=np.stack([b[1] for b in bounds]),
-        init_ready=np.stack([b[2] for b in bounds]))
+        init_ready=np.stack([b[2] for b in bounds]),
+        n_substeps=scenario.n_substeps, preemptive=scenario.preemptive)
     slos = wl.slos()
     evals = []
     for i, params in enumerate(candidates):
         sim = _result_from_dynamics(
             wl, fleets[i], get_discipline(discs[i]), policies[i].name,
-            order, slos, {k: v[i] for k, v in out.items()})
+            order, slos, {k: v[i] for k, v in out.items()},
+            n_substeps=scenario.n_substeps, preemptive=scenario.preemptive)
         evals.append(_eval_from_sim(params, sim, objective))
     return evals
 

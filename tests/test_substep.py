@@ -1,0 +1,486 @@
+"""Sub-bin preemptive simulator core: the fine-Δt substep engine.
+
+Covers the fidelity contract end to end: ``n_substeps=1`` (non-preemptive)
+routes to the coarse core byte-identically on both backends; the substep
+numpy engine and the compiled substep scan agree bit-for-bit; conservation
+(served + dropped + terminal backlog == arrivals per class and seed) holds
+across disciplines, substep counts, and preemption; the serve-order tables
+(``table_pour`` / ``table_head_key``) and the full engine are validated
+against brute-force per-request replays; ``resample_trace`` refines a trace
+without changing its realization; the p95 report columns; and the substep
+telemetry counters (off by default, bit-exact when off).
+"""
+import numpy as np
+import pytest
+
+from repro.core import get_shape
+from repro.fleet import (CLASS_HEADERS, REPORT_HEADERS, FleetConfig,
+                         PoolConfig, ReactivePolicy, StaticPolicy, class_table,
+                         cohort_tables, interactive_batch_workload,
+                         poisson_trace, resample_trace, simulate,
+                         simulate_fleet, summarize, telemetry,
+                         tiered_sla_workload)
+from repro.fleet.discipline import (get_discipline, table_head_key,
+                                    table_pour)
+from repro.fleet.workload import ServiceModel
+
+DISCIPLINES = ("fifo", "priority", "edf")
+
+# every per-(seed, bin) array on SimResult — the bit-exactness surface
+FIELDS = ("arrivals", "admitted", "served", "dropped", "queue", "replicas",
+          "billed_replicas", "latency_s", "ok_served", "pool_replicas",
+          "pool_served", "pool_billed", "utilization", "class_admitted",
+          "class_served", "class_dropped", "class_queue", "class_ok")
+
+
+def _service(t_fixed=3.0, t_unit=0.2, max_batch=8):
+    # long fixed batch time relative to dt: batches genuinely span substeps,
+    # so checkpoint-resume and preemption actually engage
+    return ServiceModel("svc", get_shape("v5e-4"), t_fixed, t_unit, max_batch)
+
+
+def _fleet(svc, replicas=2):
+    return FleetConfig((PoolConfig(svc, cold_start_s=2.0, min_replicas=1,
+                                   max_replicas=4,
+                                   initial_replicas=replicas),))
+
+
+def _workload(n_seeds=3, seed=7):
+    return interactive_batch_workload(3.0, 60.0, dt_s=2.0, n_seeds=n_seeds,
+                                      seed=seed)
+
+
+def _policy():
+    return ReactivePolicy(upper=0.7, lower=0.3, cooldown_s=4.0)
+
+
+def _run(disc, backend, n_substeps, preemptive, **kw):
+    return simulate_fleet(_workload(), _fleet(_service()), _policy(),
+                          discipline=disc, backend=backend,
+                          n_substeps=n_substeps, preemptive=preemptive, **kw)
+
+
+def _assert_bitexact(a, b, label):
+    for f in FIELDS:
+        x, y = np.asarray(getattr(a, f)), np.asarray(getattr(b, f))
+        assert np.array_equal(x, y), f"{label}: field {f!r} differs"
+    assert np.array_equal(a.sojourn_values, b.sojourn_values), label
+    assert np.array_equal(a.sojourn_weights, b.sojourn_weights), label
+
+
+# ----------------- n_substeps=1 routes to the coarse core -------------------
+
+@pytest.mark.parametrize("disc", DISCIPLINES)
+def test_n1_nonpreemptive_is_coarse_core_numpy(disc):
+    """``n_substeps=1, preemptive=False`` must be the *same code path* as the
+    defaults — byte-identical results, no substep extras."""
+    base = simulate_fleet(_workload(), _fleet(_service()), _policy(),
+                          discipline=disc, backend="numpy")
+    pinned = _run(disc, "numpy", 1, False)
+    _assert_bitexact(base, pinned, f"{disc} numpy n=1")
+    assert pinned.n_substeps == 1 and not pinned.preemptive
+    assert pinned.preemptions is None and pinned.residue_work is None
+
+
+@pytest.mark.parametrize("disc", DISCIPLINES)
+def test_n1_nonpreemptive_is_coarse_core_jax(disc):
+    pytest.importorskip("jax")
+    base = simulate_fleet(_workload(), _fleet(_service()), _policy(),
+                          discipline=disc, backend="jax")
+    pinned = _run(disc, "jax", 1, False)
+    _assert_bitexact(base, pinned, f"{disc} jax n=1")
+    assert pinned.preemptions is None
+
+
+# ----------------- substep numpy == substep jax, bit for bit ----------------
+
+@pytest.mark.parametrize("disc", DISCIPLINES)
+@pytest.mark.parametrize("n_substeps,preemptive",
+                         [(1, True), (2, False), (2, True), (4, True)])
+def test_substep_backends_bit_exact(disc, n_substeps, preemptive):
+    """The numpy substep engine and the compiled substep scan mirror each
+    other's float operation order one-for-one — results must be identical to
+    the last bit, preemption accounting included."""
+    pytest.importorskip("jax")
+    a = _run(disc, "numpy", n_substeps, preemptive)
+    b = _run(disc, "jax", n_substeps, preemptive)
+    label = f"{disc} n={n_substeps} pre={preemptive}"
+    _assert_bitexact(a, b, label)
+    assert np.array_equal(a.preemptions, b.preemptions), label
+    assert np.array_equal(a.preempted_work, b.preempted_work), label
+    assert np.array_equal(a.residue_work, b.residue_work), label
+
+
+# ----------------- conservation ---------------------------------------------
+
+def _assert_conserved(sim):
+    arrived = sim.class_admitted + sim.class_dropped       # (S, T, C)
+    served = sim.class_served.sum(axis=1)
+    dropped = sim.class_dropped.sum(axis=1)
+    terminal = sim.class_queue[:, -1, :]
+    lhs = served + dropped + terminal
+    rhs = arrived.sum(axis=1)
+    np.testing.assert_allclose(lhs, rhs, atol=1e-6, rtol=1e-9)
+
+
+@pytest.mark.parametrize("disc", DISCIPLINES)
+@pytest.mark.parametrize("n_substeps", [1, 2, 4, 8])
+@pytest.mark.parametrize("preemptive", [False, True])
+def test_conservation_seeded(disc, n_substeps, preemptive):
+    """served + dropped + terminal backlog == arrivals per (class, seed) —
+    the checkpoint-resume residue never loses or invents mass."""
+    _assert_conserved(_run(disc, "numpy", n_substeps, preemptive,
+                           max_queue=40.0))
+
+
+def test_conservation_property():
+    """Hypothesis sweep over workload shape, service terms, discipline and
+    fidelity knobs (skipped where hypothesis isn't installed; the seeded
+    sweep above always runs)."""
+    hypothesis = pytest.importorskip("hypothesis")
+    st = hypothesis.strategies
+
+    @hypothesis.settings(max_examples=25, deadline=None)
+    @hypothesis.given(
+        rate=st.floats(0.5, 6.0),
+        t_fixed=st.floats(0.1, 4.0),
+        t_unit=st.floats(0.01, 0.5),
+        disc=st.sampled_from(DISCIPLINES),
+        n_substeps=st.sampled_from([1, 2, 4, 8]),
+        preemptive=st.booleans(),
+        seed=st.integers(0, 50),
+        max_queue=st.one_of(st.none(), st.floats(5.0, 60.0)))
+    def check(rate, t_fixed, t_unit, disc, n_substeps, preemptive, seed,
+              max_queue):
+        wl = interactive_batch_workload(rate, 40.0, dt_s=2.0, n_seeds=2,
+                                        seed=seed)
+        svc = _service(t_fixed=t_fixed, t_unit=t_unit)
+        sim = simulate_fleet(wl, _fleet(svc), _policy(), discipline=disc,
+                             backend="numpy", n_substeps=n_substeps,
+                             preemptive=preemptive, max_queue=max_queue)
+        _assert_conserved(sim)
+
+    check()
+
+
+# ----------------- preemption semantics -------------------------------------
+
+def test_fifo_never_preempts():
+    """Under FIFO the head-of-queue key can never undercut a running batch's
+    key (keys are non-decreasing in arrival order), so even with
+    ``preemptive=True`` no preemption ever fires."""
+    sim = _run("fifo", "numpy", 4, True)
+    assert sim.preemptions is not None
+    assert not sim.preemptions.any()
+    assert not sim.preempted_work.any()
+
+
+def test_preemptive_disciplines_preempt_long_batches():
+    for disc in ("priority", "edf"):
+        on = _run(disc, "numpy", 4, True)
+        off = _run(disc, "numpy", 4, False)
+        assert on.preemptions.sum() > 0, disc
+        assert on.preempted_work.sum() > 0, disc
+        # non-preemptive runs never populate the checkpoint slot
+        assert not off.preemptions.any(), disc
+
+
+def test_preemption_helps_urgent_class_latency():
+    """The point of preempting: light urgent traffic over long batch jobs —
+    interrupting the running batch must not hurt (and typically improves)
+    the urgent class's latency."""
+    wl = interactive_batch_workload(2.0, 120.0, dt_s=2.0,
+                                    interactive_frac=0.2, n_seeds=3, seed=5)
+    svc = _service(t_fixed=4.0, t_unit=0.1, max_batch=16)
+
+    def run(pre):
+        return summarize(simulate(wl, svc, StaticPolicy(3),
+                                  discipline="priority", initial_replicas=3,
+                                  n_substeps=4, preemptive=pre))
+
+    on, off = run(True), run(False)
+    urgent_on, urgent_off = on.class_reports[0], off.class_reports[0]
+    assert urgent_on.name == urgent_off.name == "interactive"
+    assert urgent_on.p50_s <= urgent_off.p50_s + 1e-9
+    assert urgent_on.p99_s <= urgent_off.p99_s + 1e-9
+
+
+# ----------------- brute-force validation: serve-order tables ---------------
+
+def _brute_tables(disc, classes, T, dt, masses):
+    """Explicit per-cohort serve order for a (C, T) mass grid: cohorts
+    sorted by (key, class, bin) — the per-request order every discipline
+    reduces to at cohort granularity."""
+    keys = get_discipline(disc).keys(classes, T, dt)
+    C = len(classes)
+    return sorted(((keys[c, t], c, t) for c in range(C) for t in range(T)))
+
+
+def _brute_pour(mass, order, amt):
+    """Serve ``amt`` from explicit cohort masses in key order; returns the
+    per-class split and the largest key touched (-inf when nothing poured)."""
+    C = mass.shape[0]
+    split = np.zeros(C)
+    last = -np.inf
+    rem = float(amt)
+    for k, c, tb in order:
+        if rem <= 0.0:
+            break
+        m = mass[c, tb]
+        if m <= 0.0:
+            continue
+        take = min(m, rem)
+        mass[c, tb] = m - take
+        split[c] += take
+        rem -= take
+        last = k
+    return split, last
+
+
+def _brute_head_key(mass, order):
+    for k, c, tb in order:
+        if mass[c, tb] > 0.0:
+            return k
+    return np.inf
+
+
+@pytest.mark.parametrize("disc", DISCIPLINES)
+def test_table_pour_and_head_key_match_bruteforce(disc):
+    """The covering-prefix tables (what both substep engines pour through)
+    against a literal walk of the cohort list in (key, class, bin) order:
+    per-class splits, the preemption key of each pour, and the head-of-queue
+    key, over many random partially-drained queue states."""
+    wl = tiered_sla_workload(4.0, 60.0, dt_s=5.0, n_seeds=1, seed=5)
+    classes = wl.classes
+    C = len(classes)
+    T = wl.total_trace().n_bins
+    dt = wl.total_trace().dt_s
+    tables = cohort_tables(disc, classes, T, dt)
+    order = _brute_tables(disc, classes, T, dt, None)
+    rng = np.random.default_rng(42)
+    for trial in range(40):
+        t_now = int(rng.integers(0, T))
+        grid = rng.random((C, T)) * 5.0
+        grid[:, t_now + 1:] = 0.0                  # not yet arrived
+        # random partial drain, applied in serve order (any reachable state
+        # of the engine's queue is a prefix-drained one)
+        cum = np.zeros((1, C, T + 1))
+        cum[0, :, 1:] = np.cumsum(grid, axis=1)
+        cum[0, :, t_now + 1:] = cum[0, :, t_now + 1][:, None]
+        done = np.zeros((1, C))
+        mass = grid.copy()
+        pre_drain = rng.random() * grid.sum()
+        ds, _ = _brute_pour(mass, order, pre_drain)
+        done[0] = ds
+        # head key
+        hk = table_head_key(cum, done, tables)
+        assert hk[0] == pytest.approx(_brute_head_key(mass, order), abs=0), \
+            f"{disc} trial {trial}: head key"
+        # pour
+        amt = rng.random() * (mass.sum() * 1.2)    # sometimes over-asks
+        split, key = table_pour(cum, done, np.array([amt]), tables)
+        bsplit, bkey = _brute_pour(mass.copy(), order, amt)
+        np.testing.assert_allclose(split[0], bsplit, atol=1e-9,
+                                   err_msg=f"{disc} trial {trial}: split")
+        assert key[0] == bkey or (np.isneginf(key[0]) and np.isneginf(bkey)), \
+            f"{disc} trial {trial}: pour key {key[0]} != {bkey}"
+
+
+# ----------------- brute-force validation: the full engine ------------------
+
+def _brute_engine(workload, svc, R, n, preemptive, disc):
+    """Scalar per-seed replay of the substep engine on a constant-replica
+    single pool, serving an explicit cohort list in (key, class, bin) order —
+    no cumulative curves, no prefix tables. Returns per-(seed, bin, class)
+    served mass and per-(seed, bin) preemption counts."""
+    classes = workload.classes
+    C = len(classes)
+    trace = workload.total_trace()
+    S, T = trace.arrivals.shape
+    dt = trace.dt_s
+    dt_sub = dt / n
+    order = _brute_tables(disc, classes, T, dt, None)
+    t_fixed, t_unit = svc.t_fixed, svc.t_per_unit
+    max_b = float(svc.max_batch)
+    arr_c = workload.arrivals.astype(float)
+    served = np.zeros((S, T, C))
+    pre_n = np.zeros((S, T))
+
+    def progress(busy, busy_w, busy_k, tau, comp):
+        w = busy_w
+        if 0.0 < w <= tau:
+            comp += busy
+            return np.zeros(C), 0.0, -np.inf, tau - w
+        if w > tau:
+            return busy, w - tau, busy_k, 0.0
+        return busy, busy_w, busy_k, tau
+
+    for s in range(S):
+        mass = np.zeros((C, T))
+        new_total = np.zeros(C)
+        busy, busy_w, busy_k = np.zeros(C), 0.0, -np.inf
+        held, held_w, held_k = np.zeros(C), 0.0, -np.inf
+        for t in range(T):
+            mass[:, t] += arr_c[s, t]
+            new_total += arr_c[s, t]
+            for _ in range(n):
+                tau = dt_sub
+                comp = np.zeros(C)
+                hk = _brute_head_key(mass, order)
+                if preemptive and busy_w > 0.0 and hk < busy_k:
+                    held = held + busy
+                    held_w += busy_w
+                    held_k = max(held_k, busy_k)
+                    pre_n[s, t] += 1
+                    busy, busy_w, busy_k = np.zeros(C), 0.0, -np.inf
+                busy, busy_w, busy_k, tau = progress(busy, busy_w, busy_k,
+                                                     tau, comp)
+                if busy_w == 0.0:
+                    if held_w > 0.0 and hk >= held_k:
+                        busy, busy_w, busy_k = held, held_w, held_k
+                        held, held_w, held_k = np.zeros(C), 0.0, -np.inf
+                    else:
+                        backlog = mass.sum()
+                        if backlog > 0.0 and tau > 0.0 and R > 0:
+                            b = min(max(np.ceil(backlog / R), 1.0), max_b)
+                            bt = max(t_fixed + b * t_unit, 1e-12)
+                            amt = min(backlog, R * b)
+                            busy, _ = _brute_pour(mass, order, amt)
+                            busy_w = bt
+                            busy_k = hk    # rank by the most urgent cohort
+                busy, busy_w, busy_k, tau = progress(busy, busy_w, busy_k,
+                                                     tau, comp)
+                pour2 = np.zeros(C)
+                if busy_w == 0.0 and tau > 0.0 and R > 0:
+                    backlog2 = mass.sum()
+                    b2 = min(max(np.ceil(backlog2 / R), 1.0), max_b)
+                    bt2 = max(t_fixed + b2 * t_unit, 1e-12)
+                    cap = R * b2 / bt2 * tau
+                    pour2, _ = _brute_pour(mass, order,
+                                           min(max(backlog2, 0.0), cap))
+                served[s, t] += comp + pour2
+                # the engine's per-substep sub-eps fold of a drained class
+                for c in range(C):
+                    if mass[c].sum() <= 1e-9 + 1e-12 * new_total[c]:
+                        mass[c] = 0.0
+    return served, pre_n
+
+
+@pytest.mark.parametrize("disc", DISCIPLINES)
+@pytest.mark.parametrize("preemptive", [False, True])
+def test_engine_matches_bruteforce_replay(disc, preemptive):
+    """The full substep engine (prefix tables, vectorized over seeds) against
+    the scalar brute-force replay: per-(seed, bin, class) served mass and
+    exact preemption counts, on a constant-replica pool with long batches."""
+    wl = interactive_batch_workload(2.0, 40.0, dt_s=2.0, n_seeds=2, seed=11)
+    svc = _service()
+    R = 2
+    sim = simulate(wl, svc, StaticPolicy(R), discipline=disc,
+                   initial_replicas=R, backend="numpy", n_substeps=4,
+                   preemptive=preemptive)
+    bserved, bpre = _brute_engine(wl, svc, R, 4, preemptive, disc)
+    np.testing.assert_allclose(sim.class_served, bserved, atol=1e-9,
+                               rtol=1e-9)
+    if preemptive:
+        np.testing.assert_array_equal(sim.preemptions, bpre)
+    _assert_conserved(sim)
+
+
+# ----------------- resample_trace -------------------------------------------
+
+def test_resample_trace_conserves_arrivals():
+    tr = poisson_trace(5.0, 120.0, dt_s=6.0, n_seeds=4, seed=3)
+    fine = resample_trace(tr, 2.0, seed=9)
+    k = 3
+    assert fine.dt_s == 2.0
+    assert fine.n_bins == tr.n_bins * k
+    assert fine.duration_s == tr.duration_s
+    # per-seed, per-coarse-bin totals conserved to the request
+    regrouped = fine.arrivals.reshape(tr.n_seeds, tr.n_bins, k).sum(axis=2)
+    np.testing.assert_array_equal(regrouped, tr.arrivals)
+    # rate profile carries over unchanged (requests/s is grid-invariant)
+    np.testing.assert_array_equal(fine.rate, np.repeat(tr.rate, k))
+
+
+def test_resample_trace_seed_stable_and_identity():
+    tr = poisson_trace(5.0, 60.0, dt_s=4.0, n_seeds=3, seed=0)
+    a = resample_trace(tr, 1.0, seed=4)
+    b = resample_trace(tr, 1.0, seed=4)
+    np.testing.assert_array_equal(a.arrivals, b.arrivals)
+    c = resample_trace(tr, 1.0, seed=5)
+    assert not np.array_equal(a.arrivals, c.arrivals)
+    assert resample_trace(tr, 4.0) is tr          # k == 1: unchanged
+    with pytest.raises(ValueError, match="does not divide"):
+        resample_trace(tr, 1.5)
+
+
+def test_resampled_trace_drives_the_simulator():
+    tr = poisson_trace(4.0, 60.0, dt_s=6.0, n_seeds=2, seed=1)
+    fine = resample_trace(tr, 2.0)
+    sim = simulate(fine, _service(t_fixed=0.5), StaticPolicy(2),
+                   slo_s=5.0, initial_replicas=2, n_substeps=2)
+    assert sim.served.shape == (2, fine.n_bins)
+    np.testing.assert_array_equal(sim.arrivals.sum(axis=1),
+                                  tr.arrivals.sum(axis=1))
+
+
+# ----------------- p95 report columns ---------------------------------------
+
+def test_report_p95_everywhere():
+    assert REPORT_HEADERS.index("p95") == REPORT_HEADERS.index("p50") + 1
+    assert REPORT_HEADERS.index("p99") == REPORT_HEADERS.index("p95") + 1
+    assert CLASS_HEADERS.index("p95") == CLASS_HEADERS.index("p50") + 1
+    rep = summarize(_run("priority", "numpy", 2, True))
+    assert len(rep.row()) == len(REPORT_HEADERS)
+    assert rep.p50_s <= rep.p95_s + 1e-12 <= rep.p99_s + 2e-12
+    for c in rep.class_reports:
+        assert c.p50_s <= c.p95_s + 1e-12 <= c.p99_s + 2e-12
+    table = class_table([rep])
+    assert "p95" in table.splitlines()[0]
+    # single-class fallback row also carries p95
+    single = summarize(simulate(poisson_trace(3.0, 60.0, dt_s=5.0, n_seeds=2),
+                                _service(t_fixed=0.5), StaticPolicy(2),
+                                slo_s=5.0, initial_replicas=2))
+    assert "p95" in class_table([single]).splitlines()[0]
+    assert len(class_table([single]).splitlines()) >= 3
+
+
+# ----------------- telemetry ------------------------------------------------
+
+def test_substep_telemetry_counters():
+    with telemetry.session() as tel:
+        sim = _run("edf", "numpy", 4, True)
+    S = sim.arrivals.shape[0]
+    pre = tel.metrics.get("fleet_preemptions_total")
+    res = tel.metrics.get("fleet_residue_bins")
+    work = tel.metrics.get("fleet_preempted_work")
+    assert pre is not None and res is not None and work is not None
+    assert pre.value == pytest.approx(float(sim.preemptions.sum()) / S)
+    assert res.value == pytest.approx(
+        float((sim.residue_work > 0.0).sum()) / S)
+    np.testing.assert_allclose(work.array(),
+                               sim.preempted_work.mean(axis=0))
+    assert len(work.values) == sim.arrivals.shape[1]
+
+
+def test_coarse_runs_emit_no_preemption_metrics():
+    with telemetry.session() as tel:
+        simulate_fleet(_workload(), _fleet(_service()), _policy(),
+                       discipline="fifo", backend="numpy")
+    assert tel.metrics.get("fleet_preemptions_total") is None
+    assert tel.metrics.get("fleet_residue_bins") is None
+    assert tel.metrics.get("fleet_preempted_work") is None
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_substep_bit_exact_under_telemetry(backend):
+    """The opt-in contract extends to the substep core: recording must not
+    perturb a single bit of the simulation."""
+    if backend == "jax":
+        pytest.importorskip("jax")
+    off = _run("priority", backend, 2, True)
+    with telemetry.session():
+        on = _run("priority", backend, 2, True)
+    _assert_bitexact(off, on, f"{backend} telemetry on/off")
+    np.testing.assert_array_equal(off.preemptions, on.preemptions)
+    np.testing.assert_array_equal(off.residue_work, on.residue_work)

@@ -33,6 +33,13 @@ Simulator-backend gate (``benchmark == "sim_perf"``):
   unless the JAX path is already under the absolute wall-clock grace floor
   (both too fast to time meaningfully);
 * the backends agree: per-seed scores within tolerance, same winner;
+* the sub-bin (fine-Δt) core keeps the >= 5x compiled speedup on its own
+  preemptive n_substeps=4 cell, and its numpy/jax engines return *exactly*
+  equal candidate scores (max score delta 0);
+* the fidelity section's physics holds at the >= 90%-utilization operating
+  point: the coarse bin-granular core understates p99 vs the fine core, and
+  preemptive EDF meets the gold SLO bar at strictly lower $/hr than
+  non-preemptive FIFO;
 * telemetry stays cheap: the headline round with a telemetry session active
   runs <= 5% slower than with telemetry off — unless the absolute slowdown
   is under the timing-noise grace floor.
@@ -207,6 +214,8 @@ SIM_SCORE_TOL = 1e-6            # backend-agreement bar on per-seed scores
 MAX_TELEMETRY_OVERHEAD = 0.05   # telemetry-on <= 5% slower (ISSUE 6)
 TELEMETRY_FLOOR_S = 0.2         # ...unless the absolute slowdown is under
 #                                 this (relative % on a fast round is noise)
+FIDELITY_MIN_UTIL = 0.9         # the fidelity claims are pinned to a
+#                                 high-utilization operating point (ISSUE 7)
 
 
 def compare_sim(fresh: dict, base: dict) -> list:
@@ -250,13 +259,93 @@ def compare_sim(fresh: dict, base: dict) -> list:
                 f"{MAX_TELEMETRY_OVERHEAD * 100:.0f}% "
                 f"(slowdown {on - off:.2f}s > {TELEMETRY_FLOOR_S}s "
                 "grace floor)")
-    fresh_cells = {(r["n_candidates"], r["n_seeds"], r["n_bins"])
+    problems += _sim_substep_problems(fresh)
+    problems += _sim_fidelity_problems(fresh)
+    # n_substeps is part of the cell identity: the fine-core cell reuses the
+    # coarse grid dims and would otherwise collide with its n=1 twin
+    fresh_cells = {(r["n_candidates"], r["n_seeds"], r["n_bins"],
+                    r.get("n_substeps", 1))
                    for r in fresh.get("records", [])}
     for brec in base.get("records", []):
-        cell = (brec["n_candidates"], brec["n_seeds"], brec["n_bins"])
+        cell = (brec["n_candidates"], brec["n_seeds"], brec["n_bins"],
+                brec.get("n_substeps", 1))
         if cell not in fresh_cells:
             problems.append(f"sim: missing grid cell {cell} "
                             "(present in baseline)")
+    return problems
+
+
+def _sim_substep_problems(fresh: dict) -> list:
+    """The fine-Δt core's own bars: compiled speedup and exact backend
+    score agreement on the preemptive substep cell."""
+    sub = fresh.get("substep_headline")
+    if sub is None:
+        return ["sim: substep_headline missing — sim_perf.py should bench "
+                "the preemptive fine-core cell"]
+    problems = []
+    speedup, jax_s = sub.get("speedup"), sub.get("jax_warm_s")
+    if speedup is None or jax_s is None:
+        return [f"sim: substep_headline incomplete (have {sorted(sub)})"]
+    if speedup < MIN_SIM_SPEEDUP and jax_s > SIM_WALL_FLOOR_S:
+        problems.append(
+            f"sim: fine core only {speedup:.1f}x the numpy loop on the "
+            f"{sub.get('grid')} substep cell — bar {MIN_SIM_SPEEDUP}x "
+            f"(jax {jax_s:.3f}s > {SIM_WALL_FLOOR_S}s grace floor)")
+    delta = sub.get("max_score_delta")
+    if delta != 0.0:
+        problems.append(f"sim: fine-core backends not exactly equal — max "
+                        f"candidate score delta {delta} (bar: 0.0)")
+    return problems
+
+
+def _sim_fidelity_problems(fresh: dict) -> list:
+    """Fidelity physics at the high-utilization operating point: coarse
+    understates the tail, preemption buys the gold SLO cheaper than
+    replicas, and the fine core's backends are bit-exact."""
+    fid = fresh.get("fidelity")
+    if fid is None:
+        return ["sim: fidelity section missing — sim_perf.py should run "
+                "the coarse-vs-fine high-utilization comparison"]
+    problems = []
+    hu = fid.get("high_util", {})
+    util = hu.get("utilization")
+    coarse, fine = hu.get("coarse_p99_s"), hu.get("fine_p99_s")
+    if util is None or coarse is None or fine is None:
+        problems.append(f"sim: fidelity high_util incomplete "
+                        f"(have {sorted(hu)})")
+    else:
+        if util < FIDELITY_MIN_UTIL:
+            problems.append(
+                f"sim: fidelity operating point at {util:.2f} utilization — "
+                f"the claims are only meaningful >= {FIDELITY_MIN_UTIL}")
+        if not fine > coarse:
+            problems.append(
+                f"sim: coarse core no longer understates p99 at high "
+                f"utilization (coarse {coarse:.2f}s vs fine {fine:.2f}s)")
+    hl = fid.get("headline", {})
+    edf, fifo = hl.get("edf_preemptive"), hl.get("fifo")
+    bar = fid.get("gold_bar")
+    if not edf or not fifo or bar is None:
+        problems.append("sim: fidelity headline incomplete — need the "
+                        "cheapest gold-bar fleet for preemptive EDF and "
+                        "non-preemptive FIFO")
+    else:
+        if edf["gold_attainment"] < bar:
+            problems.append(
+                f"sim: preemptive EDF misses the gold bar "
+                f"({edf['gold_attainment']:.3f} < {bar})")
+        if not edf["usd_per_hour"] < fifo["usd_per_hour"]:
+            problems.append(
+                f"sim: preemptive EDF no longer meets the gold SLO cheaper "
+                f"than FIFO (${edf['usd_per_hour']:.2f}/h vs "
+                f"${fifo['usd_per_hour']:.2f}/h)")
+    agree = fid.get("agreement", {})
+    if agree.get("error"):
+        pass   # no jax in this environment: reported, not gated
+    elif not agree.get("bit_exact") or agree.get("max_field_delta") != 0.0:
+        problems.append(
+            f"sim: fine core numpy vs jax not bit-exact at the operating "
+            f"point — max field delta {agree.get('max_field_delta')}")
     return problems
 
 
@@ -309,6 +398,8 @@ def main(argv=None) -> int:
             return 1
         head = fresh["headline"]
         ov = fresh.get("telemetry_overhead", {})
+        sub = fresh.get("substep_headline", {})
+        hu = fresh.get("fidelity", {}).get("high_util", {})
         print(f"sim gate green: compiled backend {head['speedup']:.1f}x the "
               f"numpy loop on the {head['grid']} headline round "
               f"(bar {MIN_SIM_SPEEDUP}x), backends agree "
@@ -316,6 +407,13 @@ def main(argv=None) -> int:
               f"{fresh['agreement']['max_score_delta']:.2e}), telemetry "
               f"overhead {ov.get('overhead_frac', 0.0) * 100:+.1f}% "
               f"(bar {MAX_TELEMETRY_OVERHEAD * 100:.0f}%)")
+        print(f"  fine core: {sub.get('speedup', 0.0):.1f}x on the "
+              f"{sub.get('grid')} substep cell, score delta "
+              f"{sub.get('max_score_delta')}; fidelity at util "
+              f"{hu.get('utilization', 0.0):.2f}: coarse p99 "
+              f"{hu.get('coarse_p99_s', 0.0):.1f}s vs fine "
+              f"{hu.get('fine_p99_s', 0.0):.1f}s, preemptive EDF meets the "
+              "gold bar cheaper than FIFO")
         return 0
 
     if fresh.get("benchmark") == "controller_tuning":
