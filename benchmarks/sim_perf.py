@@ -273,9 +273,9 @@ def bench_telemetry_overhead(n_candidates: int, n_seeds: int,
                              reps: int = OVERHEAD_REPS) -> dict:
     """Best-of-``reps`` wall clock of the headline flash-crowd round with
     telemetry disabled vs enabled (fresh session per enabled rep, arms
-    interleaved) — the <= 5% bar ``check_bench.py`` gates. Runs on the numpy backend: every candidate
-    sim records its streams there, so it bounds the per-``SimResult``
-    recording cost the jax path shares."""
+    interleaved) — the <= 5% bar ``check_bench.py`` gates. Runs on the
+    numpy backend: every candidate sim records its streams there, so it
+    bounds the per-``SimResult`` recording cost the jax path shares."""
     objective = Objective(min_attainment=1.0, penalty_usd_per_hour=1e5)
     candidates = PredictivePolicy.param_space().sample_lhs(n_candidates,
                                                           seed=SEED)

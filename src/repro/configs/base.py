@@ -158,7 +158,9 @@ class ArchConfig:
                 ep = dense_ffn(self.moe_d_ff)
                 layer_t += self.n_experts * ep + d * self.n_experts
                 layer_a += self.n_experts_per_tok * ep + d * self.n_experts
-            elif self.family == "ssm" or (self.attn_period and not self.is_attn_layer(li) and self.d_ff == 0):
+            elif self.family == "ssm" or (self.attn_period
+                                          and not self.is_attn_layer(li)
+                                          and self.d_ff == 0):
                 pass                                        # pure SSM block, no FFN
             elif self.d_ff > 0:
                 layer_t += dense_ffn(self.d_ff)
@@ -250,12 +252,14 @@ def model_flops(cfg: ArchConfig, shape: ShapeSpec) -> float:
     if shape.kind == "train":
         toks = shape.tokens
         if cfg.encdec:
-            toks = shape.global_batch * (shape.seq_len + max(shape.seq_len // cfg.dec_len_fraction, 16))
+            toks = shape.global_batch * (
+                shape.seq_len + max(shape.seq_len // cfg.dec_len_fraction, 16))
         return 6.0 * n * toks
     if shape.kind == "prefill":
         toks = shape.tokens
         if cfg.encdec:
-            toks = shape.global_batch * (shape.seq_len + max(shape.seq_len // cfg.dec_len_fraction, 16))
+            toks = shape.global_batch * (
+                shape.seq_len + max(shape.seq_len // cfg.dec_len_fraction, 16))
         return 2.0 * n * toks
     # decode: one token per sequence; params touched = active (non-embedding lookup
     # cost dominated by matmuls) — keep the simple 2·N·B convention.

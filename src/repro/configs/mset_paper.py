@@ -45,4 +45,5 @@ SURVEILLANCE_GRID_1024 = {
 
 # Customer archetypes from §I of the paper.
 CUSTOMER_A = MSETUseCase("customer-A-small", n_signals=20, n_observations=8760, n_memvec=128)
-CUSTOMER_B = MSETUseCase("customer-B-airbus-fleet", n_signals=75_000, n_observations=2_592_000, n_memvec=8192)
+CUSTOMER_B = MSETUseCase("customer-B-airbus-fleet", n_signals=75_000,
+                         n_observations=2_592_000, n_memvec=8192)

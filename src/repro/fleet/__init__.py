@@ -6,11 +6,15 @@
 # surfaces to fleet operating cost. The tuning subpackage turns the loop on
 # the controller itself: `tune()` autonomously scopes autoscaler/fleet
 # parameters by racing candidate configs through the simulator.
-from repro.fleet import telemetry
-from repro.fleet.autoscaler import (HeterogeneousPredictivePolicy, Policy,
-                                    PredictivePolicy, QueueProportionalPolicy,
-                                    ReactivePolicy, StaticPolicy,
-                                    default_policies)
+from repro.fleet import control, telemetry
+from repro.fleet.autoscaler import (FitToUsagePolicy,
+                                    HeterogeneousPredictivePolicy, PIDPolicy,
+                                    PIPolicy, Policy, PredictivePolicy,
+                                    QueueProportionalPolicy, ReactivePolicy,
+                                    StaticPolicy, default_policies)
+from repro.fleet.control import (ClosedLoopController, ControlEvent,
+                                 ControlResult, DriftCase,
+                                 service_degradation_case, tail_workload)
 from repro.fleet.cohort import (CohortMetrics, cohort_metrics,
                                 multiclass_cohort_metrics, row_searchsorted)
 from repro.fleet.discipline import (DISCIPLINES, CohortQueue, Discipline,
@@ -19,16 +23,18 @@ from repro.fleet.discipline import (DISCIPLINES, CohortQueue, Discipline,
                                     get_discipline, split_service)
 from repro.fleet.kernels import KernelObs, PolicyKernel, make_kernel
 from repro.fleet.report import (CLASS_HEADERS, REPORT_HEADERS, ClassReport,
-                                FleetReport, best_per_trace, class_table,
-                                comparison_table, cost_efficiency_table,
-                                summarize, telemetry_dashboard,
-                                weighted_percentile)
+                                FleetReport, WindowMetrics, best_per_trace,
+                                class_table, comparison_table,
+                                cost_efficiency_table, summarize,
+                                telemetry_dashboard, weighted_percentile,
+                                window_metrics)
 from repro.fleet.scenarios import (Scenario, interactive_batch_workload,
                                    lm_decode_scenario, mset_scenario,
                                    tiered_sla_workload)
 from repro.fleet.simulator import (FleetConfig, FleetObs, PoolConfig,
-                                   SimResult, draw_cold_start_delays,
-                                   simulate, simulate_fleet)
+                                   SegmentedSimulation, SimResult,
+                                   draw_cold_start_delays, simulate,
+                                   simulate_fleet)
 from repro.fleet.traces import (Trace, diurnal_trace, flash_crowd_trace,
                                 load_trace_csv, poisson_trace, ramp_trace,
                                 replay_trace, resample_trace, standard_traces)
@@ -37,11 +43,17 @@ from repro.fleet.tuning import (CandidateEval, Categorical, Continuous,
                                 TuningBudget, TuningReport, TuningScenario,
                                 discipline_dim, evaluate_candidates,
                                 exhaustive, pareto_frontier, quota_dims,
-                                race, tune, tuning_scenario)
+                                race, tune, tuning_scenario,
+                                warm_start_candidates)
 from repro.fleet.workload import (RequestClass, ServiceModel, Workload,
                                   service_model_from_cell)
 
 __all__ = [
+    "FitToUsagePolicy", "PIDPolicy", "PIPolicy",
+    "ClosedLoopController", "ControlEvent", "ControlResult", "DriftCase",
+    "service_degradation_case", "tail_workload", "control",
+    "SegmentedSimulation", "WindowMetrics", "window_metrics",
+    "warm_start_candidates",
     "HeterogeneousPredictivePolicy", "Policy", "PredictivePolicy",
     "QueueProportionalPolicy", "ReactivePolicy", "StaticPolicy",
     "default_policies", "CohortMetrics", "cohort_metrics",

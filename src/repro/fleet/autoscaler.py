@@ -13,6 +13,15 @@ All policies are vectorized over Monte Carlo seeds: ``decide`` receives
   ahead and provisions for it; its *shape* is pre-picked by the scoping stack
   (``recommend()`` over CellResult rows) and its capacity estimate comes from a
   ``ResponseSurface`` fitted on the service batch time over the batch grid.
+* ``PIPolicy`` / ``PIDPolicy`` — classical feedback in the style of
+  ServerlessContainers' ``PIController``: the replica target is a base count
+  plus a PI(D) correction on the error between an observed signal
+  (utilization or normalized queue depth) and its setpoint, with an
+  anti-windup clamp on the integral term. Zero gains degenerate exactly to
+  ``StaticPolicy``.
+* ``FitToUsagePolicy``       — ServerlessContainers ``Guardian``-style
+  fit-to-usage rule: capacity follows the rolling peak of *observed used*
+  capacity plus a headroom margin, never demand forecasts.
 
 Each built-in family also has a *functional kernel* — the pure
 ``init/step``-over-arrays decomposition the compiled simulator backend scans
@@ -411,6 +420,178 @@ class HeterogeneousPredictivePolicy(Policy):
                    window_bins=int(params["window_bins"]),
                    sustain_bins=int(params["sustain_bins"]),
                    headroom=float(params["headroom"]))
+
+
+class PIPolicy(Policy):
+    """Proportional-integral feedback on a utilization or queue setpoint.
+
+    The replica target is ``n_base + round(kp * e + ki * I)`` where the
+    error ``e`` is the observed signal minus its setpoint and ``I`` is the
+    running error integral, clamped to ``[-windup, +windup]`` (anti-windup:
+    a long saturated excursion cannot bank unbounded authority, so the
+    controller's reach is bounded by ``n_base + kp * e + ki * windup`` —
+    re-centering ``n_base`` is the re-tuner's job when the world shifts).
+
+    ``signal="utilization"`` drives on ``utilization - setpoint``;
+    ``signal="queue"`` drives on backlog normalized to the base capacity
+    per bin (``queue / (n_base * max_throughput * dt)``), which keeps
+    growing past saturation where utilization pins at 1. With
+    ``kp == ki == 0`` the policy is exactly ``StaticPolicy(n_base)``.
+
+    A starvation guard holds at least one replica while work is queued or
+    arriving: at zero replicas the utilization signal is dead (nothing
+    serves, so utilization reads 0), the error pins negative, and the
+    integrator locks the fleet at zero forever — the guard is the one
+    non-feedback escape from that death spiral."""
+    name = "pi"
+
+    def __init__(self, n_base: int, kp: float = 8.0, ki: float = 1.0,
+                 setpoint: float = 0.7, signal: str = "utilization",
+                 windup: float = 16.0):
+        if signal not in ("utilization", "queue"):
+            raise ValueError(f"signal must be 'utilization' or 'queue', "
+                             f"got {signal!r}")
+        if not (np.isfinite(windup) and windup >= 0):
+            raise ValueError(f"windup must be >= 0, got {windup}")
+        self.n_base = int(n_base)
+        self.kp = float(kp)
+        self.ki = float(ki)
+        self.setpoint = float(setpoint)
+        self.signal = signal
+        self.windup = float(windup)
+        self._i = None
+
+    def reset(self, n_seeds):
+        self._i = np.zeros(n_seeds)
+
+    def _error(self, obs) -> np.ndarray:
+        if self.signal == "queue":
+            cap = max(self.n_base * obs.service.max_throughput * obs.dt_s,
+                      _EPS)
+            v = obs.queue / cap
+        else:
+            v = obs.utilization
+        return v - self.setpoint
+
+    def _floor(self, target, obs):
+        starved = (obs.queue >= 1.0) | (obs.arrival_rate > 0.0)
+        return np.maximum(target, np.where(starved, 1.0, 0.0))
+
+    def decide(self, t, obs):
+        e = self._error(obs)
+        self._i = np.clip(self._i + e, -self.windup, self.windup)
+        target = np.maximum(
+            np.rint(self.n_base + self.kp * e + self.ki * self._i), 0.0)
+        return self._floor(target, obs)
+
+    @classmethod
+    def param_space(cls):
+        from repro.fleet.tuning.space import Continuous, Integer, ParamSpace
+        return ParamSpace((
+            Integer("n_base", 1, 48, log=True),
+            Continuous("kp", 0.25, 32.0, log=True),
+            Continuous("ki", 0.02, 8.0, log=True),
+            Continuous("setpoint", 0.35, 0.9),
+            Continuous("windup", 2.0, 64.0, log=True),
+        ))
+
+    @classmethod
+    def from_params(cls, params, *, signal: str = "utilization", **context):
+        return cls(n_base=int(params["n_base"]), kp=float(params["kp"]),
+                   ki=float(params["ki"]),
+                   setpoint=float(params["setpoint"]), signal=signal,
+                   windup=float(params["windup"]))
+
+
+class PIDPolicy(PIPolicy):
+    """``PIPolicy`` plus a derivative term ``kd * (e_t - e_{t-1})`` (the
+    previous error starts at 0): the kick damps overshoot on sharp error
+    swings. ``kd == 0`` decides identically to ``PIPolicy``."""
+    name = "pid"
+
+    def __init__(self, n_base: int, kp: float = 8.0, ki: float = 1.0,
+                 kd: float = 0.0, setpoint: float = 0.7,
+                 signal: str = "utilization", windup: float = 16.0):
+        super().__init__(n_base, kp=kp, ki=ki, setpoint=setpoint,
+                         signal=signal, windup=windup)
+        self.kd = float(kd)
+        self._prev = None
+
+    def reset(self, n_seeds):
+        super().reset(n_seeds)
+        self._prev = np.zeros(n_seeds)
+
+    def decide(self, t, obs):
+        e = self._error(obs)
+        self._i = np.clip(self._i + e, -self.windup, self.windup)
+        d = e - self._prev
+        self._prev = e
+        target = np.maximum(
+            np.rint(self.n_base + self.kp * e + self.ki * self._i
+                    + self.kd * d), 0.0)
+        return self._floor(target, obs)
+
+    @classmethod
+    def param_space(cls):
+        from repro.fleet.tuning.space import Continuous, ParamSpace
+        return PIPolicy.param_space() + ParamSpace((
+            Continuous("kd", 0.02, 16.0, log=True),))
+
+    @classmethod
+    def from_params(cls, params, *, signal: str = "utilization", **context):
+        return cls(n_base=int(params["n_base"]), kp=float(params["kp"]),
+                   ki=float(params["ki"]), kd=float(params["kd"]),
+                   setpoint=float(params["setpoint"]), signal=signal,
+                   windup=float(params["windup"]))
+
+
+class FitToUsagePolicy(Policy):
+    """ServerlessContainers ``Guardian``-style fit-to-usage rule: capacity
+    follows *observed usage*, not demand estimates. Each bin records the
+    used capacity (``utilization * ready replicas``, in replica
+    equivalents); the target is the rolling peak over the last
+    ``window_bins`` bins plus a multiplicative ``headroom`` margin. A
+    saturated fleet (utilization pinned at 1) therefore grows
+    geometrically by ``1 + headroom`` per window until headroom reappears,
+    and an idle fleet decays once the peak ages out — with a starvation
+    guard holding at least one replica while there is any demand."""
+    name = "fit-to-usage"
+
+    def __init__(self, headroom: float = 0.3, window_bins: int = 6):
+        if not (np.isfinite(headroom) and headroom >= 0):
+            raise ValueError(f"headroom must be >= 0, got {headroom}")
+        self.headroom = float(headroom)
+        self.window_bins = max(int(window_bins), 1)
+        self._hist = None
+        self._n_obs = 0
+
+    def reset(self, n_seeds):
+        self._hist = np.zeros((self.window_bins, n_seeds))
+        self._n_obs = 0
+
+    def decide(self, t, obs):
+        used = obs.utilization * np.maximum(obs.replicas, 0.0)
+        self._hist = np.roll(self._hist, -1, axis=0)
+        self._hist[-1] = used
+        self._n_obs += 1
+        w = min(self._n_obs, self.window_bins)
+        fit = self._hist[-w:].max(axis=0)
+        target = np.ceil(fit * (1.0 + self.headroom))
+        starved = (obs.queue >= 1) | (obs.arrival_rate > 0)
+        return np.maximum(target, np.where(starved, 1.0, 0.0))
+
+    @classmethod
+    def param_space(cls):
+        from repro.fleet.tuning.space import Continuous, Integer, ParamSpace
+        return ParamSpace((
+            Continuous("headroom", 0.05, 1.5, log=True),
+            Integer("window_bins", 2, 24, log=True),
+        ))
+
+    @classmethod
+    def from_params(cls, params, **context):
+        return cls(headroom=float(params["headroom"]),
+                   window_bins=int(params["window_bins"]))
 
 
 def default_policies(rows, constraint: Constraint, units_per_step: float,

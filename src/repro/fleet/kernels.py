@@ -34,9 +34,11 @@ from typing import Callable, NamedTuple
 import numpy as np
 
 from repro.fleet import telemetry
-from repro.fleet.autoscaler import (HeterogeneousPredictivePolicy,
-                                    PredictivePolicy, QueueProportionalPolicy,
-                                    ReactivePolicy, StaticPolicy)
+from repro.fleet.autoscaler import (FitToUsagePolicy,
+                                    HeterogeneousPredictivePolicy, PIDPolicy,
+                                    PIPolicy, PredictivePolicy,
+                                    QueueProportionalPolicy, ReactivePolicy,
+                                    StaticPolicy)
 
 _EPS = 1e-12
 
@@ -276,6 +278,104 @@ def _hetero_kernel(fleet, classes, reference: HeterogeneousPredictivePolicy,
         init=init, step=step)
 
 
+def _pi_error(prm, obs, use_queue: bool, mt0: float):
+    """The PI(D) error term — ``PIPolicy._error``'s exact arithmetic."""
+    import jax.numpy as jnp
+
+    if use_queue:
+        cap = jnp.maximum(prm["n_base"] * mt0 * obs.dt_s, _EPS)
+        v = obs.queue / cap
+    else:
+        v = obs.utilization
+    return v - prm["setpoint"]
+
+
+def _pi_kernel(fleet, classes, reference: PIPolicy) -> PolicyKernel:
+    import jax.numpy as jnp
+
+    mt0 = float(fleet.pools[0].service.max_throughput)
+    use_queue = reference.signal == "queue"
+
+    def init():
+        return {"i": jnp.asarray(0.0)}
+
+    def step(prm, state, obs):
+        e = _pi_error(prm, obs, use_queue, mt0)
+        i = jnp.clip(state["i"] + e, -prm["windup"], prm["windup"])
+        target = jnp.maximum(
+            jnp.rint(prm["n_base"] + prm["kp"] * e + prm["ki"] * i), 0.0)
+        starved = (obs.queue >= 1) | (obs.arrival_rate > 0)
+        target = jnp.maximum(target, jnp.where(starved, 1.0, 0.0))
+        return {"i": i}, jnp.reshape(target, (1,))
+
+    return PolicyKernel(
+        name="pi",
+        param_names=("n_base", "kp", "ki", "setpoint", "windup"),
+        params_of=lambda pol: {
+            "n_base": float(pol.n_base), "kp": float(pol.kp),
+            "ki": float(pol.ki), "setpoint": float(pol.setpoint),
+            "windup": float(pol.windup)},
+        init=init, step=step)
+
+
+def _pid_kernel(fleet, classes, reference: PIDPolicy) -> PolicyKernel:
+    import jax.numpy as jnp
+
+    mt0 = float(fleet.pools[0].service.max_throughput)
+    use_queue = reference.signal == "queue"
+
+    def init():
+        return {"i": jnp.asarray(0.0), "prev": jnp.asarray(0.0)}
+
+    def step(prm, state, obs):
+        e = _pi_error(prm, obs, use_queue, mt0)
+        i = jnp.clip(state["i"] + e, -prm["windup"], prm["windup"])
+        d = e - state["prev"]
+        target = jnp.maximum(
+            jnp.rint(prm["n_base"] + prm["kp"] * e + prm["ki"] * i
+                     + prm["kd"] * d), 0.0)
+        starved = (obs.queue >= 1) | (obs.arrival_rate > 0)
+        target = jnp.maximum(target, jnp.where(starved, 1.0, 0.0))
+        return {"i": i, "prev": e}, jnp.reshape(target, (1,))
+
+    return PolicyKernel(
+        name="pid",
+        param_names=("n_base", "kp", "ki", "kd", "setpoint", "windup"),
+        params_of=lambda pol: {
+            "n_base": float(pol.n_base), "kp": float(pol.kp),
+            "ki": float(pol.ki), "kd": float(pol.kd),
+            "setpoint": float(pol.setpoint), "windup": float(pol.windup)},
+        init=init, step=step)
+
+
+def _fit_to_usage_kernel(fleet, classes, reference: FitToUsagePolicy,
+                         max_window: int = None) -> PolicyKernel:
+    import jax.numpy as jnp
+
+    W = int(max_window or reference.window_bins)
+
+    def init():
+        return {"hist": jnp.zeros(W), "n_obs": jnp.asarray(0)}
+
+    def step(prm, state, obs):
+        used = obs.utilization * jnp.maximum(obs.replicas, 0.0)
+        hist = _push(state["hist"], used)
+        n_obs = state["n_obs"] + 1
+        w = jnp.minimum(n_obs, prm["window_bins"])
+        age = jnp.arange(W)[::-1]
+        fit = jnp.max(jnp.where(age < w, hist, -jnp.inf))
+        target = jnp.ceil(fit * (1.0 + prm["headroom"]))
+        starved = (obs.queue >= 1) | (obs.arrival_rate > 0)
+        target = jnp.maximum(target, jnp.where(starved, 1.0, 0.0))
+        return {"hist": hist, "n_obs": n_obs}, jnp.reshape(target, (1,))
+
+    return PolicyKernel(
+        name="fit-to-usage", param_names=("headroom", "window_bins"),
+        params_of=lambda pol: {"headroom": float(pol.headroom),
+                               "window_bins": float(pol.window_bins)},
+        init=init, step=step)
+
+
 _KERNEL_CACHE: dict = {}
 
 
@@ -294,6 +394,11 @@ def _kernel_key(policy, fleet, classes, max_window, max_sustain):
     if type(policy) is PredictivePolicy:
         W = int(max_window or policy.forecaster.window_bins)
         return ("predictive", float(policy._rate), W, slos)
+    if type(policy) is PIPolicy or type(policy) is PIDPolicy:
+        return (policy.name, policy.signal,
+                float(fleet.pools[0].service.max_throughput))
+    if type(policy) is FitToUsagePolicy:
+        return ("fit-to-usage", int(max_window or policy.window_bins))
     if type(policy) is HeterogeneousPredictivePolicy:
         W = int(max_window or policy.forecaster.window_bins)
         Ws = int(max_sustain or policy.sustain.window_bins)
@@ -330,6 +435,13 @@ def make_kernel(policy, fleet, classes, *, max_window: int = None,
     elif type(policy) is PredictivePolicy:
         kernel = _predictive_kernel(fleet, classes, policy,
                                     max_window=max_window)
+    elif type(policy) is PIPolicy:
+        kernel = _pi_kernel(fleet, classes, policy)
+    elif type(policy) is PIDPolicy:
+        kernel = _pid_kernel(fleet, classes, policy)
+    elif type(policy) is FitToUsagePolicy:
+        kernel = _fit_to_usage_kernel(fleet, classes, policy,
+                                      max_window=max_window)
     else:
         kernel = _hetero_kernel(fleet, classes, policy,
                                 max_window=max_window,

@@ -10,6 +10,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro.core.cost_model import dollar_cost
 from repro.core.report import fmt_time, markdown_table
 from repro.fleet.simulator import SimResult
 
@@ -138,6 +139,60 @@ def summarize(sim: SimResult) -> FleetReport:
         discipline=sim.discipline,
         class_reports=_class_reports(sim, float(total_arrived)),
     )
+
+
+@dataclass(frozen=True)
+class WindowMetrics:
+    """SLO/cost scalars over one bin window of a simulation — what the
+    closed-loop controller and its benchmark read per control segment.
+    Attainment is window-local: served/dropped mass *within* the window
+    against the ok mass within it (requests still queued at ``t1`` belong
+    to a later window)."""
+    t0: int
+    t1: int
+    slo_attainment: float            # pooled over classes
+    worst_class_attainment: float
+    usd: float                       # mean over MC seeds, window total
+    usd_per_hour: float
+    mean_utilization: float
+    mean_queue: float
+    mean_replicas: float             # billed
+
+
+def window_metrics(sim: SimResult, t0: int, t1: int = None) -> WindowMetrics:
+    """Per-window analogue of ``summarize``: attainment, utilization and
+    dollar cost over bins ``[t0, t1)`` (``t1=None``: to the end). The
+    closed-loop recovery gate compares pre-drift, post-drift, and
+    post-recovery windows of one continuous trace with this."""
+    T = sim.arrivals.shape[1]
+    t1 = T if t1 is None else int(t1)
+    t0 = int(t0)
+    if not 0 <= t0 < t1 <= T:
+        raise ValueError(f"bad window [{t0}, {t1}) for {T} bins")
+    completed = float((sim.served + sim.dropped)[:, t0:t1].sum())
+    pooled = (float(sim.ok_served[:, t0:t1].sum() / completed)
+              if completed > 0 else 1.0)
+    worst = pooled
+    if sim.class_ok is not None:
+        done_c = (sim.class_served + sim.class_dropped)[:, t0:t1, :].sum(
+            axis=(0, 1))
+        ok_c = sim.class_ok[:, t0:t1, :].sum(axis=(0, 1))
+        att_c = np.divide(ok_c, done_c, out=np.ones_like(ok_c),
+                          where=done_c > 0)
+        worst = float(att_c.min())
+    usd = 0.0
+    for p, pc in enumerate(sim.fleet.pools):
+        bins = float(sim.pool_billed[:, t0:t1, p].sum(axis=1).mean())
+        usd += dollar_cost(sim.dt_s, bins, pc.service.shape.chips,
+                           pc.service.shape.hw)
+    hours = (t1 - t0) * sim.dt_s / 3600.0
+    util = sim.utilization[:, t0:t1][sim.replicas[:, t0:t1] > 0]
+    return WindowMetrics(
+        t0=t0, t1=t1, slo_attainment=pooled, worst_class_attainment=worst,
+        usd=usd, usd_per_hour=usd / max(hours, 1e-12),
+        mean_utilization=float(util.mean()) if util.size else 0.0,
+        mean_queue=float(sim.queue[:, t0:t1].mean()),
+        mean_replicas=float(sim.billed_replicas[:, t0:t1].mean()))
 
 
 def comparison_table(reports: list) -> str:

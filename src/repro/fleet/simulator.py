@@ -286,7 +286,7 @@ def _assemble_result(workload, fleet: FleetConfig, disc, policy_name: str,
                      slot_served, slot_class, slot_bt, *,
                      n_substeps: int = 1, preemptive: bool = False,
                      slot_order=None, admitted_fine=None,
-                     extras=None) -> SimResult:
+                     extras=None, record_telemetry: bool = True) -> SimResult:
     """Exact per-request latency + SimResult from the dynamics arrays — the
     post-loop half of the simulation, shared by the numpy and JAX backends
     (the compiled path reproduces the *dynamics*; this accounting is common).
@@ -357,8 +357,12 @@ def _assemble_result(workload, fleet: FleetConfig, disc, policy_name: str,
     # Both backends funnel their dynamics through this one assembly path, so
     # an active telemetry session sees identical streams from either; the
     # hook only *reads* the finished result (no-op when disabled).
-    telemetry.record(result, slot_bt=slot_bt, slot_served=slot_served,
-                     order=slot_order)
+    # ``record_telemetry=False`` marks an interim prefix assembly of a
+    # segmented run — the closed-loop controller peeks at the trace-so-far
+    # without double-counting it in an active session.
+    if record_telemetry:
+        telemetry.record(result, slot_bt=slot_bt, slot_served=slot_served,
+                         order=slot_order)
     return result
 
 
@@ -626,39 +630,103 @@ def simulate_fleet(workload, fleet: FleetConfig, policy, *,
                             slot_served, slot_class, slot_bt)
 
 
-def _simulate_fleet_substep(workload, fleet: FleetConfig, policy, disc,
-                            order, slos, max_queue, cs_delay,
-                            n_substeps: int, preemptive: bool) -> SimResult:
-    """Fine-Δt numpy engine: every wall-clock bin subdivided into
-    ``n_substeps`` micro-steps with checkpoint-resume batch service.
+@dataclass
+class FleetState:
+    """Checkpoint of the substep engine's carried state at a bin boundary —
+    everything a resumed segment needs so the stitched trace is one
+    continuous run: ready/cold-starting replicas, the pending-launch ledger,
+    the cumulative-admitted queue curves, and the in-flight / preempted
+    batch residue (PR 7's checkpoint-resume machinery, made explicit).
+    All arrays are owned and mutated in place by ``_run_substep_segment``."""
+    t: int                      # next bin to simulate
+    ready: np.ndarray           # (S, P) ready replicas
+    in_flight: np.ndarray       # (S, P) replicas still cold-starting
+    pend: np.ndarray            # (S, T + max_cb + 2, P) launches maturing
+    Acum: np.ndarray            # (S, C, T + 1) cumulative admitted curves
+    done: np.ndarray            # (S, C) cumulative poured totals
+    busy_mass: np.ndarray       # (S, P, C) in-flight batch mass split
+    busy_work: np.ndarray       # (S, P) in-flight batch work remaining
+    busy_key: np.ndarray        # (S, P) in-flight batch preemption key
+    held_mass: np.ndarray       # (S, P, C) checkpointed (preempted) batch
+    held_work: np.ndarray       # (S, P)
+    held_key: np.ndarray        # (S, P)
 
-    Unlike the coarse loop (fluid service: a slot's pour departs within its
-    own bin), a batch here is an explicit unit of in-flight work: it is
-    poured once — a covering-prefix over the discipline's static serve-order
-    tables, the *same* rule the compiled backend bisects
-    (``discipline.table_pour``) — then carries a work-remaining residue
-    across substeps and departs only when that residue hits zero. Under
-    ``preemptive=True`` a strictly lower-keyed head-of-queue cohort
-    interrupts the running batch at a substep boundary: the batch
-    checkpoints (mass + remaining work + key) and resumes once no queued
-    cohort outranks it. Scale-downs never kill in-flight work (connection
-    draining): a shrunk pool still finishes its running batch. When a batch
-    completes with substep budget to spare, the leftover drains the queue
-    fluidly at the pool's instantaneous rate — the coarse within-bin
-    convention, so short-batch regimes keep coarse-like throughput while
-    long batches get honest head-of-line blocking.
 
-    The policy's decision cadence, the scale-down water-fill, the
-    pending-launch ledger and billing are the coarse loop's verbatim; it
-    observes bin-aggregated signals. The reported queue is *outstanding*
-    work (admitted - departed: waiting + in-flight + checkpointed mass), so
-    served + dropped + terminal queue == arrivals stays exact.
+@dataclass
+class _SubstepBuffers:
+    """Full-trace output arrays of a (possibly segmented) substep run; each
+    segment fills its own bin range."""
+    slot_served: np.ndarray     # (S, U, M) per (substep, slot) served mass
+    slot_class: np.ndarray      # (S, U * M, C) ...split across classes
+    slot_bt: np.ndarray         # (S, U, M) batch time of that slot
+    admitted_fine: np.ndarray   # (S, U, C) admissions at substep granularity
+    admitted: np.ndarray        # (S, T)
+    cls: dict                   # (S, T, C) admitted / dropped / queue
+    rec: dict                   # (S, T) served / dropped / ... / util
+    pool_rep: np.ndarray        # (S, T, P)
+    pool_billed: np.ndarray     # (S, T, P)
+    pre_n: np.ndarray           # (S, T) preemption counts
+    pre_w: np.ndarray           # (S, T) preempted work (batch-seconds)
+    residue: np.ndarray         # (S, T) carried work at bin end
 
-    Every per-substep float op mirrors the compiled substep core's operation
-    order one-for-one; the two are pinned bit-exact in the tests.
-    """
-    from repro.fleet.discipline import (cohort_tables, table_head_key,
-                                        table_pour)
+
+def _init_substep_state(workload, fleet: FleetConfig, order,
+                        max_cb: int) -> FleetState:
+    trace = workload.total_trace()
+    S, T = trace.arrivals.shape
+    C = len(workload.classes)
+    P = fleet.n_pools
+    ready = np.zeros((S, P))
+    for p, pc in enumerate(fleet.pools):
+        ready[:, p] = _initial_replicas(pc, trace.rate[0], p == order[0])
+    return FleetState(
+        t=0, ready=ready, in_flight=np.zeros((S, P)),
+        pend=np.zeros((S, T + max_cb + 2, P)),
+        # queue state: cumulative-admitted curves + poured totals (the
+        # compiled backend's representation — both engines pour via the
+        # same tables)
+        Acum=np.zeros((S, C, T + 1)), done=np.zeros((S, C)),
+        # in-flight batch per pool: mass split, remaining work, key
+        busy_mass=np.zeros((S, P, C)), busy_work=np.zeros((S, P)),
+        busy_key=np.full((S, P), -np.inf),
+        # checkpointed (preempted) batch per pool
+        held_mass=np.zeros((S, P, C)), held_work=np.zeros((S, P)),
+        held_key=np.full((S, P), -np.inf))
+
+
+def _alloc_substep_buffers(S, T, P, C, n: int) -> _SubstepBuffers:
+    U = T * n
+    M = 2 * P            # per substep: a completion + a pour slot per pool
+    return _SubstepBuffers(
+        slot_served=np.zeros((S, U, M)), slot_class=np.zeros((S, U * M, C)),
+        slot_bt=np.zeros((S, U, M)), admitted_fine=np.zeros((S, U, C)),
+        admitted=np.zeros((S, T)),
+        cls={k: np.zeros((S, T, C))
+             for k in ("admitted", "dropped", "queue")},
+        rec={k: np.zeros((S, T)) for k in
+             ("served", "dropped", "queue", "replicas", "billed", "util")},
+        pool_rep=np.zeros((S, T, P)), pool_billed=np.zeros((S, T, P)),
+        pre_n=np.zeros((S, T)), pre_w=np.zeros((S, T)),
+        residue=np.zeros((S, T)))
+
+
+def _run_substep_segment(workload, fleet: FleetConfig, policy, disc, order,
+                         slos, max_queue, cs_delay, n: int, preemptive: bool,
+                         tables, st: FleetState, buf: _SubstepBuffers,
+                         t0: int, t1: int) -> None:
+    """Advance the substep engine from bin ``t0`` to ``t1`` (exclusive),
+    mutating ``st`` and filling ``buf[:, t0:t1]`` in place.
+
+    The loop body is the substep engine's verbatim (see
+    ``_simulate_fleet_substep``); a single ``[0, T)`` segment is
+    byte-identical to the unsegmented run. Between calls the caller may
+    swap ``policy`` or ``fleet`` (service behaviour only — the pend ledger
+    and drain order are sized/pinned at allocation), which is how the
+    closed-loop controller hot-swaps a policy mid-trace while PR 7's
+    residue machinery carries the in-flight state across the boundary.
+    Service terms and the cold-start plan are re-derived from ``fleet``
+    here so a degraded fleet takes effect at the segment boundary."""
+    from repro.fleet.discipline import table_head_key, table_pour
 
     trace = workload.total_trace()
     classes = workload.classes
@@ -667,53 +735,40 @@ def _simulate_fleet_substep(workload, fleet: FleetConfig, policy, disc,
     P = len(pools)
     S, T = trace.arrivals.shape
     dt = trace.dt_s
-    n = int(n_substeps)
     dt_sub = dt / n
-    tables = cohort_tables(disc, classes, T, dt)
     cold_bins, scan_bins, jittered, _, _ = _cold_start_plan(pools, dt)
-    max_cb = max(scan_bins)
+    max_cb = st.pend.shape[1] - T - 2    # pend slack fixed at allocation
     svc_terms = [(p.service.t_fixed, p.service.t_per_unit,
                   float(p.service.max_batch)) for p in pools]
     tput = [p.service.max_throughput for p in pools]
-
-    policy.reset(S)
-    ready = np.zeros((S, P))
-    for p, pc in enumerate(pools):
-        ready[:, p] = _initial_replicas(pc, trace.rate[0], p == order[0])
     arrivals_c = workload.arrivals.astype(float)
-    pend = np.zeros((S, T + max_cb + 2, P))
-    in_flight = np.zeros((S, P))
 
-    # queue state: cumulative-admitted curves + poured totals (the compiled
-    # backend's representation — both engines pour via the same tables)
-    Acum = np.zeros((S, C, T + 1))
-    done = np.zeros((S, C))
-    # in-flight batch per pool: mass split, remaining work, preemption key
-    busy_mass = np.zeros((S, P, C))
-    busy_work = np.zeros((S, P))
-    busy_key = np.full((S, P), -np.inf)
-    # checkpointed (preempted) batch per pool
-    held_mass = np.zeros((S, P, C))
-    held_work = np.zeros((S, P))
-    held_key = np.full((S, P), -np.inf)
+    ready = st.ready
+    in_flight = st.in_flight
+    pend = st.pend
+    Acum = st.Acum
+    done = st.done
+    busy_mass = st.busy_mass
+    busy_work = st.busy_work
+    busy_key = st.busy_key
+    held_mass = st.held_mass
+    held_work = st.held_work
+    held_key = st.held_key
+    slot_served = buf.slot_served
+    slot_class = buf.slot_class
+    slot_bt = buf.slot_bt
+    admitted_fine = buf.admitted_fine
+    admitted = buf.admitted
+    cls = buf.cls
+    rec = buf.rec
+    pool_rep = buf.pool_rep
+    pool_billed = buf.pool_billed
+    pre_n = buf.pre_n
+    pre_w = buf.pre_w
+    residue = buf.residue
+    M = 2 * P
 
-    U = T * n
-    M = 2 * P            # per substep: a completion + a pour slot per pool
-    slot_served = np.zeros((S, U, M))
-    slot_class = np.zeros((S, U * M, C))
-    slot_bt = np.zeros((S, U, M))
-    admitted_fine = np.zeros((S, U, C))
-    admitted = np.zeros((S, T))
-    cls = {k: np.zeros((S, T, C)) for k in ("admitted", "dropped", "queue")}
-    rec = {k: np.zeros((S, T)) for k in
-           ("served", "dropped", "queue", "replicas", "billed", "util")}
-    pool_rep = np.zeros((S, T, P))
-    pool_billed = np.zeros((S, T, P))
-    pre_n = np.zeros((S, T))
-    pre_w = np.zeros((S, T))
-    residue = np.zeros((S, T))
-
-    for t in range(T):
+    for t in range(t0, t1):
         matured = pend[:, t, :]
         ready += matured
         in_flight -= matured
@@ -923,15 +978,278 @@ def _simulate_fleet_substep(workload, fleet: FleetConfig, policy, disc,
         rec["util"][:, t] = util
         residue[:, t] = busy_work.sum(axis=1) + held_work.sum(axis=1)
 
-    extras = {"preemptions": pre_n, "preempted_work": pre_w,
-              "residue_work": residue}
+    st.done = done      # the one rebound (not in-place) state array
+    st.t = t1
+
+
+def _assemble_substep(workload, fleet: FleetConfig, disc, policy_name,
+                      order, slos, buf: _SubstepBuffers, n: int,
+                      preemptive: bool, *, t1: int = None,
+                      record_telemetry: bool = True) -> SimResult:
+    """SimResult from (a prefix of) a substep run's buffers. ``t1`` < T
+    assembles the trace-so-far of a segmented run — the closed-loop
+    controller's telemetry feed — and should leave ``record_telemetry``
+    off so an active session only sees the finished trace once."""
+    T = buf.admitted.shape[1]
+    if t1 is None:
+        t1 = T
+    if t1 < T:
+        workload = _slice_workload_time(workload, t1)
+    M = buf.slot_served.shape[2]
+    u1 = t1 * n
+    extras = {"preemptions": buf.pre_n[:, :t1],
+              "preempted_work": buf.pre_w[:, :t1],
+              "residue_work": buf.residue[:, :t1]}
     slot_order = [q for q in order for _ in range(2)]
-    return _assemble_result(workload, fleet, disc, policy.name, order, slos,
-                            admitted, cls, rec, pool_rep, pool_billed,
-                            slot_served, slot_class, slot_bt,
+    return _assemble_result(workload, fleet, disc, policy_name, order, slos,
+                            buf.admitted[:, :t1],
+                            {k: v[:, :t1] for k, v in buf.cls.items()},
+                            {k: v[:, :t1] for k, v in buf.rec.items()},
+                            buf.pool_rep[:, :t1], buf.pool_billed[:, :t1],
+                            buf.slot_served[:, :u1],
+                            buf.slot_class[:, :u1 * M],
+                            buf.slot_bt[:, :u1],
                             n_substeps=n, preemptive=preemptive,
                             slot_order=slot_order,
-                            admitted_fine=admitted_fine, extras=extras)
+                            admitted_fine=buf.admitted_fine[:, :u1],
+                            extras=extras,
+                            record_telemetry=record_telemetry)
+
+
+def _slice_workload_time(workload, t1: int):
+    """The first ``t1`` bins of every class trace (prefix assembly of a
+    segmented run keeps arrivals and buffers on the same time axis)."""
+    traces = tuple(Trace(name=tr.name, dt_s=tr.dt_s, rate=tr.rate[:t1],
+                         arrivals=tr.arrivals[:, :t1])
+                   for tr in workload.traces)
+    return Workload(workload.name, workload.classes, traces)
+
+
+def _simulate_fleet_substep(workload, fleet: FleetConfig, policy, disc,
+                            order, slos, max_queue, cs_delay,
+                            n_substeps: int, preemptive: bool) -> SimResult:
+    """Fine-Δt numpy engine: every wall-clock bin subdivided into
+    ``n_substeps`` micro-steps with checkpoint-resume batch service.
+
+    Unlike the coarse loop (fluid service: a slot's pour departs within its
+    own bin), a batch here is an explicit unit of in-flight work: it is
+    poured once — a covering-prefix over the discipline's static serve-order
+    tables, the *same* rule the compiled backend bisects
+    (``discipline.table_pour``) — then carries a work-remaining residue
+    across substeps and departs only when that residue hits zero. Under
+    ``preemptive=True`` a strictly lower-keyed head-of-queue cohort
+    interrupts the running batch at a substep boundary: the batch
+    checkpoints (mass + remaining work + key) and resumes once no queued
+    cohort outranks it. Scale-downs never kill in-flight work (connection
+    draining): a shrunk pool still finishes its running batch. When a batch
+    completes with substep budget to spare, the leftover drains the queue
+    fluidly at the pool's instantaneous rate — the coarse within-bin
+    convention, so short-batch regimes keep coarse-like throughput while
+    long batches get honest head-of-line blocking.
+
+    The policy's decision cadence, the scale-down water-fill, the
+    pending-launch ledger and billing are the coarse loop's verbatim; it
+    observes bin-aggregated signals. The reported queue is *outstanding*
+    work (admitted - departed: waiting + in-flight + checkpointed mass), so
+    served + dropped + terminal queue == arrivals stays exact.
+
+    Every per-substep float op mirrors the compiled substep core's operation
+    order one-for-one; the two are pinned bit-exact in the tests. The loop
+    itself lives in ``_run_substep_segment`` (state in an explicit
+    ``FleetState``), so ``SegmentedSimulation`` can run the same engine in
+    checkpoint-resume segments; this single-segment path is byte-identical
+    to the pre-refactor function.
+    """
+    from repro.fleet.discipline import cohort_tables
+
+    trace = workload.total_trace()
+    classes = workload.classes
+    C = len(classes)
+    P = fleet.n_pools
+    S, T = trace.arrivals.shape
+    dt = trace.dt_s
+    n = int(n_substeps)
+    tables = cohort_tables(disc, classes, T, dt)
+    _, scan_bins, _, _, _ = _cold_start_plan(fleet.pools, dt)
+
+    policy.reset(S)
+    st = _init_substep_state(workload, fleet, order, max(scan_bins))
+    buf = _alloc_substep_buffers(S, T, P, C, n)
+    _run_substep_segment(workload, fleet, policy, disc, order, slos,
+                         max_queue, cs_delay, n, preemptive, tables,
+                         st, buf, 0, T)
+    return _assemble_substep(workload, fleet, disc, policy.name, order,
+                             slos, buf, n, preemptive)
+
+
+class SegmentedSimulation:
+    """Checkpoint-resume driver over the substep engine: run a workload in
+    bin segments, the full carried state (queues, in-flight batches,
+    pending launches, batch residue) surviving every boundary, so the
+    finished trace is one continuous run.
+
+    Between segments the caller may hot-swap the policy (new params or a
+    new family) and/or the fleet's *service behaviour* — the closed-loop
+    controller's actuation primitive. A policy swap takes effect at the
+    boundary (the incoming policy is reset; in-flight work keeps
+    draining). A fleet swap models the world changing under the
+    controller — e.g. ``telemetry.degrade_fleet`` inflating service times
+    mid-trace — and must preserve pool count, labels and prices: hardware
+    cannot be exchanged mid-trace, only how it behaves. The drain order
+    and the pending-launch ledger are pinned at construction.
+
+    ``run_until(T)`` + ``result()`` with no swaps is equivalent to
+    ``simulate_fleet(..., n_substeps=n, preemptive=...)`` on the numpy
+    backend (single segment: byte-identical; segmented: the same run split
+    at boundaries)."""
+
+    def __init__(self, workload, fleet: FleetConfig, policy, *,
+                 slo_s: float = None, max_queue: float = None,
+                 discipline="fifo", cold_start_seed: int = 0,
+                 seed_indices=None, cold_start_delays=None,
+                 n_substeps: int = 1, preemptive: bool = False):
+        from repro.fleet.discipline import cohort_tables
+
+        if isinstance(workload, Trace):
+            if slo_s is None:
+                raise ValueError("slo_s is required when simulating a "
+                                 "bare Trace")
+            workload = Workload.from_trace(workload, slo_s)
+        elif slo_s is not None:
+            raise ValueError("slo_s comes from the Workload's "
+                             "RequestClasses; pass one or the other")
+        n = int(n_substeps)
+        if n < 1:
+            raise ValueError(f"n_substeps must be >= 1, got {n}")
+        self.workload = workload
+        self.fleet = fleet
+        self.policy = policy
+        self.disc = get_discipline(discipline)
+        self.n_substeps = n
+        self.preemptive = bool(preemptive)
+        per_pool = bool(getattr(policy, "per_pool", False))
+        if fleet.n_pools > 1 and not per_pool:
+            raise ValueError(f"policy {policy.name!r} returns a single "
+                             f"target; a {fleet.n_pools}-pool fleet needs "
+                             "a per-pool policy")
+        self.max_queue = fleet.max_queue if max_queue is None else max_queue
+        self.order = fleet.drain_order()
+        trace = workload.total_trace()
+        S, T = trace.arrivals.shape
+        self.n_seeds, self.n_bins = S, T
+        dt = trace.dt_s
+        seed_ids = (np.arange(S) if seed_indices is None
+                    else np.asarray(seed_indices, int))
+        if cold_start_delays is not None:
+            cs_delay = np.asarray(cold_start_delays, float)
+            if cs_delay.shape != (S, T, fleet.n_pools):
+                raise ValueError(
+                    f"cold_start_delays shape {cs_delay.shape} != "
+                    f"{(S, T, fleet.n_pools)}")
+        else:
+            cs_delay = draw_cold_start_delays(fleet.pools, S, T, dt,
+                                              cold_start_seed, seed_ids)
+        self._cs_delay = cs_delay
+        self._slos = workload.slos()
+        self._tables = cohort_tables(self.disc, workload.classes, T, dt)
+        _, scan_bins, _, _, _ = _cold_start_plan(fleet.pools, dt)
+        policy.reset(S)
+        self.state = _init_substep_state(workload, fleet, self.order,
+                                         max(scan_bins))
+        self._buf = _alloc_substep_buffers(S, T, fleet.n_pools,
+                                           len(workload.classes), n)
+
+    @property
+    def t(self) -> int:
+        """Next bin to simulate (bins [0, t) are done)."""
+        return self.state.t
+
+    @property
+    def done(self) -> bool:
+        return self.state.t >= self.n_bins
+
+    def run_until(self, t1: int) -> "SegmentedSimulation":
+        """Advance the simulation to bin ``t1`` (exclusive)."""
+        t1 = int(t1)
+        if not (self.state.t <= t1 <= self.n_bins):
+            raise ValueError(f"run_until({t1}): segment must lie in "
+                             f"[{self.state.t}, {self.n_bins}]")
+        if t1 > self.state.t:
+            _run_substep_segment(self.workload, self.fleet, self.policy,
+                                 self.disc, self.order, self._slos,
+                                 self.max_queue, self._cs_delay,
+                                 self.n_substeps, self.preemptive,
+                                 self._tables, self.state, self._buf,
+                                 self.state.t, t1)
+        return self
+
+    def swap(self, policy=None, fleet: FleetConfig = None) \
+            -> "SegmentedSimulation":
+        """Hot-swap the policy and/or the fleet's service behaviour at the
+        current segment boundary. The incoming policy starts fresh
+        (``reset``); carried state — queue curves, in-flight batches,
+        pending launches — survives untouched."""
+        if self.done:
+            raise ValueError("cannot swap after the final bin")
+        if fleet is not None:
+            self._check_fleet_swap(fleet)
+            self.fleet = fleet
+        if policy is not None:
+            per_pool = bool(getattr(policy, "per_pool", False))
+            if self.fleet.n_pools > 1 and not per_pool:
+                raise ValueError(
+                    f"policy {policy.name!r} returns a single target; a "
+                    f"{self.fleet.n_pools}-pool fleet needs a per-pool "
+                    "policy")
+            policy.reset(self.n_seeds)
+            self.policy = policy
+        return self
+
+    def _check_fleet_swap(self, fleet: FleetConfig) -> None:
+        old = self.fleet
+        if fleet.n_pools != old.n_pools:
+            raise ValueError(f"fleet swap changes pool count "
+                             f"({old.n_pools} -> {fleet.n_pools})")
+        for p_new, p_old in zip(fleet.pools, old.pools):
+            same = (p_new.label == p_old.label
+                    and p_new.service.shape.name == p_old.service.shape.name
+                    and p_new.service.shape.price_per_hour
+                    == p_old.service.shape.price_per_hour)
+            if not same:
+                raise ValueError(
+                    f"fleet swap must keep pool identity/pricing (pool "
+                    f"{p_old.label!r} -> {p_new.label!r}); only service "
+                    "behaviour may change mid-trace")
+        _, scan_bins, _, _, _ = _cold_start_plan(
+            fleet.pools, self.workload.dt_s)
+        max_cb = self.state.pend.shape[1] - self.n_bins - 2
+        if max(scan_bins) > max_cb:
+            raise ValueError(
+                "fleet swap lengthens the cold-start horizon beyond the "
+                f"allocated launch ledger ({max(scan_bins)} > {max_cb} "
+                "bins)")
+
+    def result(self) -> SimResult:
+        """The finished continuous run (requires ``run_until(n_bins)``)."""
+        if not self.done:
+            raise ValueError(f"simulation at bin {self.state.t} of "
+                             f"{self.n_bins}; run_until the end first")
+        return _assemble_substep(self.workload, self.fleet, self.disc,
+                                 self.policy.name, self.order, self._slos,
+                                 self._buf, self.n_substeps,
+                                 self.preemptive)
+
+    def partial_result(self, *, record_telemetry: bool = False) -> SimResult:
+        """The trace-so-far (bins [0, t)) as a SimResult — the closed-loop
+        controller's telemetry feed. Telemetry recording is off by default
+        so an active session sees the finished trace exactly once."""
+        if self.state.t == 0:
+            raise ValueError("no bins simulated yet")
+        return _assemble_substep(self.workload, self.fleet, self.disc,
+                                 self.policy.name, self.order, self._slos,
+                                 self._buf, self.n_substeps,
+                                 self.preemptive, t1=self.state.t,
+                                 record_telemetry=record_telemetry)
 
 
 def _dynamics_inputs(workload, fleet: FleetConfig, order, cs_delay):

@@ -12,12 +12,13 @@ from repro.fleet.tuning.result import (TuningReport, frontier_table,
                                        pareto_frontier)
 from repro.fleet.tuning.space import (Categorical, Continuous, Dim, Integer,
                                       ParamSpace, discipline_dim, quota_dims)
-from repro.fleet.tuning.tuner import TuningBudget, tune, tuning_scenario
+from repro.fleet.tuning.tuner import (TuningBudget, tune, tuning_scenario,
+                                      warm_start_candidates)
 
 __all__ = [
     "CandidateEval", "Objective", "TuningScenario", "evaluate_candidates",
     "per_seed_metrics", "RaceResult", "exhaustive", "race", "TuningReport",
     "frontier_table", "pareto_frontier", "Categorical", "Continuous", "Dim",
     "Integer", "ParamSpace", "discipline_dim", "quota_dims", "TuningBudget",
-    "tune", "tuning_scenario",
+    "tune", "tuning_scenario", "warm_start_candidates",
 ]

@@ -308,6 +308,9 @@ def _evaluate_batched(scenario: TuningScenario, candidates: list,
     # racing rounds (a shrinking round must reuse the compiled program)
     windows = [int(p.forecaster.window_bins) for p in policies
                if hasattr(p, "forecaster")]
+    # fit-to-usage keeps its own ring buffer (window_bins, no forecaster)
+    windows += [int(p.window_bins) for p in policies
+                if not hasattr(p, "forecaster") and hasattr(p, "window_bins")]
     sustains = [int(p.sustain.window_bins) for p in policies
                 if hasattr(p, "sustain")]
     prev = scenario._batch_windows or (0, 0)

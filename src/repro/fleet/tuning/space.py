@@ -31,6 +31,12 @@ class Dim:
     def from_unit(self, u):
         raise NotImplementedError
 
+    def to_unit(self, value) -> float:
+        """Map a value back to [0, 1] — the inverse of ``from_unit`` (up to
+        discretization), so warm-started sampling can perturb an incumbent
+        configuration in unit space."""
+        raise NotImplementedError
+
     def grid(self, levels: int) -> list:
         raise NotImplementedError
 
@@ -59,6 +65,12 @@ class Continuous(Dim):
         if self.log:
             return float(self.lo * (self.hi / self.lo) ** u)
         return float(self.lo + u * (self.hi - self.lo))
+
+    def to_unit(self, value) -> float:
+        v = float(np.clip(value, self.lo, self.hi))
+        if self.log:
+            return float(np.log(v / self.lo) / np.log(self.hi / self.lo))
+        return float((v - self.lo) / (self.hi - self.lo))
 
     def grid(self, levels: int) -> list:
         if self.log:
@@ -92,6 +104,12 @@ class Integer(Dim):
             v = self.lo + u * (self.hi - self.lo + 1) - 0.5
         return int(np.clip(round(v), self.lo, self.hi))
 
+    def to_unit(self, value) -> float:
+        v = float(np.clip(value, self.lo, self.hi))
+        if self.log:
+            return float(np.log(v / self.lo) / np.log(self.hi / self.lo))
+        return float((v - self.lo + 0.5) / (self.hi - self.lo + 1))
+
     def grid(self, levels: int) -> list:
         space = (np.geomspace if self.log else np.linspace)
         vals = np.clip(np.round(space(self.lo, self.hi, levels)),
@@ -115,6 +133,14 @@ class Categorical(Dim):
     def from_unit(self, u):
         return self.choices[min(int(u * len(self.choices)),
                                 len(self.choices) - 1)]
+
+    def to_unit(self, value) -> float:
+        # the center of the choice's own bin (unknown values: first choice)
+        try:
+            i = self.choices.index(value)
+        except ValueError:
+            i = 0
+        return (i + 0.5) / len(self.choices)
 
     def grid(self, levels: int) -> list:
         return list(self.choices)

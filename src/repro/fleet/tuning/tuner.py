@@ -111,9 +111,62 @@ def _fit_surface(space, evals, min_rounds: int = 2):
     return None, ()
 
 
+def warm_start_candidates(report: TuningReport, space, n: int, *,
+                          seed: int = 0, jitter: float = 0.15) -> list:
+    """Candidate configs seeded from an incumbent ``TuningReport``'s
+    surviving region: the incumbent winner and the candidates that survived
+    to the final racing round come in verbatim (anchors — a re-tune must
+    never score worse than simply re-racing the incumbent), and the
+    remaining slots are a small Latin-hypercube perturbation of the winner —
+    per-dim stratified offsets of up to ``±jitter`` of each dim's unit range
+    (``Dim.to_unit``/``from_unit``), so a drift re-tune explores the
+    incumbent's neighbourhood instead of restarting blind. Dims of ``space``
+    the incumbent never tuned (say the re-tune adds a knob) fall back to a
+    fresh stratified draw."""
+    if n < 1:
+        raise ValueError("need n >= 1 candidates")
+    rng = np.random.default_rng(seed)
+    anchors, seen = [], set()
+    max_rounds = max((e.n_rounds for e in report.evals), default=0)
+    ranked = [report.winner] + sorted(
+        (e for e in report.evals if e.n_rounds >= max_rounds),
+        key=lambda e: e.mean_score())
+    for e in ranked:
+        if e is None:
+            continue
+        params = {d.name: e.params[d.name] for d in space.dims
+                  if d.name in e.params}
+        if len(params) != len(space.dims):
+            continue        # the incumbent never tuned some dim: no anchor
+        key = tuple(repr(params[k]) for k in space.names)
+        if key in seen:
+            continue
+        seen.add(key)
+        anchors.append(params)
+        if len(anchors) >= n:
+            break
+    m = n - len(anchors)
+    if m > 0:
+        w = report.winner.params if report.winner is not None else {}
+        configs = [dict() for _ in range(m)]
+        for d in space.dims:
+            strat = (rng.permutation(m) + rng.uniform(size=m)) / m
+            if d.name in w:
+                u0 = d.to_unit(w[d.name])
+                u = np.clip(u0 + (strat - 0.5) * (2.0 * jitter), 0.0, 1.0)
+            else:
+                u = strat
+            for i in range(m):
+                configs[i][d.name] = d.from_unit(u[i])
+        anchors.extend(configs)
+    return anchors[:n]
+
+
 def tune(scenario: TuningScenario, space, objective: Objective = None,
          budget: TuningBudget = None, *, seed: int = 0,
-         baseline: dict = None) -> TuningReport:
+         baseline: dict = None,
+         warm_start: TuningReport = None,
+         warm_jitter: float = 0.15) -> TuningReport:
     """Autonomously scope the controller: search ``space`` for the config of
     ``scenario.policy_cls`` minimizing ``objective`` over the scenario's
     Monte Carlo workload. Fully deterministic under (``seed``, budget,
@@ -122,13 +175,23 @@ def tune(scenario: TuningScenario, space, objective: Objective = None,
     ``baseline`` (optional) is a hand-set config evaluated at full replicate
     budget on the same paired draws — the tuned-vs-default comparison
     ``TuningReport.dominates_baseline()`` reads.
+
+    ``warm_start`` (optional) replaces the cold LHS design with
+    ``warm_start_candidates``: the incumbent report's surviving region plus
+    a ``±warm_jitter`` unit-space perturbation of its winner — the budgeted
+    re-tune the closed-loop controller runs when the drift probe trips.
     """
     objective = objective or Objective()
     budget = budget or TuningBudget()
     with telemetry.span("tune", scenario=scenario.name,
                         backend=scenario.backend) as root:
-        with telemetry.span("tune.sample", sampler=budget.sampler):
-            if budget.sampler == "grid":
+        with telemetry.span("tune.sample", sampler=budget.sampler,
+                            warm=warm_start is not None):
+            if warm_start is not None:
+                candidates = warm_start_candidates(
+                    warm_start, space, budget.n_candidates, seed=seed,
+                    jitter=warm_jitter)
+            elif budget.sampler == "grid":
                 candidates = space.grid(budget.grid_levels)
             elif budget.sampler == "lhs":
                 candidates = space.sample_lhs(budget.n_candidates, seed=seed)

@@ -58,11 +58,14 @@ def init_moe(cfg: ArchConfig, key, ep_size: Optional[int] = None):
     ks = jax.random.split(key, 4)
     p = {
         "router": layers.dense_init(ks[0], (d, cfg.n_experts), ("embed", None)),
-        "w_up": layers.dense_init(ks[1], (e_pad, d, ff), ("experts", "embed", "expert_mlp"), in_axis=1),
-        "w_down": layers.dense_init(ks[2], (e_pad, ff, d), ("experts", "expert_mlp", "embed"), in_axis=1),
+        "w_up": layers.dense_init(ks[1], (e_pad, d, ff),
+                                  ("experts", "embed", "expert_mlp"), in_axis=1),
+        "w_down": layers.dense_init(ks[2], (e_pad, ff, d),
+                                    ("experts", "expert_mlp", "embed"), in_axis=1),
     }
     if cfg.mlp_type == "swiglu":
-        p["w_gate"] = layers.dense_init(ks[3], (e_pad, d, ff), ("experts", "embed", "expert_mlp"), in_axis=1)
+        p["w_gate"] = layers.dense_init(ks[3], (e_pad, d, ff),
+                                        ("experts", "embed", "expert_mlp"), in_axis=1)
     return p
 
 

@@ -138,7 +138,8 @@ def _apply_block_pos(cfg: ArchConfig, entry: dict, p, x, rules: ShardingRules, *
                                        cache=cache_entry["attn"], pos=pos)
             new_cache["attn"] = nc
         else:
-            attn_mode = "bidir" if (cfg.encdec and enc_out is None and not entry["cross"]) else "causal"
+            attn_mode = ("bidir" if (cfg.encdec and enc_out is None
+                                     and not entry["cross"]) else "causal")
             out, nc = layers.attention(cfg, p["mixer"], h, rules, mode=attn_mode,
                                        positions=positions, q_chunk=q_chunk)
             if mode == "prefill" and nc is not None:

@@ -1,0 +1,581 @@
+"""Closed-loop control subsystem: segmented checkpoint-resume simulation,
+feedback (PI/PID, fit-to-usage) policy families, warm-started re-tuning,
+window metrics, the drift-triggered ClosedLoopController, and the CI gate
+for the closed-loop benchmark."""
+import importlib.util
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import CellResult, RooflineTerms, get_shape
+from repro.fleet import (FitToUsagePolicy, FleetConfig, Integer, Objective,
+                         ParamSpace, PIDPolicy, PIPolicy, PoolConfig,
+                         SegmentedSimulation, StaticPolicy, TuningBudget,
+                         TuningScenario, poisson_trace,
+                         service_model_from_cell, simulate, simulate_fleet,
+                         tune, warm_start_candidates, window_metrics)
+from repro.fleet.control import (ClosedLoopController,
+                                 service_degradation_case, tail_workload)
+from repro.fleet.simulator import FleetObs
+from repro.fleet.telemetry.drift import (DriftProbe, degrade_fleet,
+                                         telemetry_matrix)
+from repro.fleet.workload import Trace, Workload
+
+
+def _cell(shape="v5e-4", t_comp=0.4, t_mem=0.1, t_coll=0.05, batch=64):
+    return CellResult(params={"batch": batch,
+                              "chips": get_shape(shape).chips},
+                      shape_name=shape,
+                      terms=RooflineTerms(t_comp, t_mem, t_coll),
+                      analysis={"peak_memory_per_device": 1e9})
+
+
+def _service(**kw):
+    return service_model_from_cell(_cell(**kw),
+                                   units_per_step=kw.get("batch", 64))
+
+
+def _obs(svc, *, queue=0.0, util=0.7, rate=0.0, replicas=4.0, n_seeds=3,
+         dt=5.0, t_s=0.0):
+    full = np.full
+    return FleetObs(t_s=t_s, dt_s=dt,
+                    arrival_rate=full(n_seeds, float(rate)),
+                    queue=full(n_seeds, float(queue)),
+                    replicas=full(n_seeds, float(replicas)),
+                    in_flight=np.zeros(n_seeds),
+                    utilization=full(n_seeds, float(util)),
+                    service=svc)
+
+
+def _workload(rate_mult=3.0, duration=600.0, n_seeds=3, seed=0, slo_s=2.0):
+    svc = _service()
+    tr = poisson_trace(rate_mult * svc.max_throughput, duration, dt_s=5.0,
+                       n_seeds=n_seeds, seed=seed)
+    return Workload.from_trace(tr, slo_s), svc
+
+
+def _fleet(svc, initial=8, max_replicas=24, cold_start_s=30.0,
+           max_queue=None):
+    return FleetConfig((PoolConfig(service=svc, cold_start_s=cold_start_s,
+                                   initial_replicas=initial,
+                                   max_replicas=max_replicas),),
+                       max_queue=max_queue)
+
+
+# ------------------- PI / PID / fit-to-usage policy families ----------------
+
+def test_pi_zero_gains_is_static_decide_sweep():
+    """kp == ki == 0 makes PIPolicy decide exactly like StaticPolicy on any
+    observation stream (seeded random sweep)."""
+    svc = _service()
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        n_base = int(rng.integers(1, 48))
+        pi = PIPolicy(n_base, kp=0.0, ki=0.0,
+                      setpoint=float(rng.uniform(0.35, 0.9)),
+                      windup=float(rng.uniform(2.0, 64.0)))
+        st = StaticPolicy(n_base)
+        pi.reset(4)
+        st.reset(4)
+        for t in range(8):
+            obs = _obs(svc, queue=float(rng.uniform(0, 1e4)),
+                       util=float(rng.uniform(0, 1)),
+                       rate=float(rng.uniform(0, 1e3)),
+                       replicas=float(rng.integers(0, 32)), n_seeds=4)
+            np.testing.assert_array_equal(pi.decide(t, obs),
+                                          st.decide(t, obs))
+
+
+def test_pi_zero_gains_is_static_property():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    svc = _service()
+    finite = dict(allow_nan=False, allow_infinity=False)
+
+    @settings(max_examples=60, deadline=None)
+    @given(n_base=st.integers(1, 48),
+           setpoint=st.floats(0.35, 0.9, **finite),
+           queue=st.floats(0.0, 1e6, **finite),
+           util=st.floats(0.0, 1.0, **finite),
+           rate=st.floats(0.0, 1e4, **finite),
+           replicas=st.integers(0, 64))
+    def prop(n_base, setpoint, queue, util, rate, replicas):
+        pi = PIPolicy(n_base, kp=0.0, ki=0.0, setpoint=setpoint)
+        pi.reset(2)
+        static = StaticPolicy(n_base)
+        obs = _obs(svc, queue=queue, util=util, rate=rate,
+                   replicas=replicas, n_seeds=2)
+        np.testing.assert_array_equal(pi.decide(0, obs),
+                                      static.decide(0, obs))
+
+    prop()
+
+
+def test_pi_zero_gains_is_static_end_to_end():
+    """Full-simulation equivalence, both utilization and queue signals."""
+    svc = _service()
+    tr = poisson_trace(3.0 * svc.max_throughput, 400.0, dt_s=5.0,
+                       n_seeds=3, seed=2)
+    kw = dict(slo_s=2.0, cold_start_s=30.0, initial_replicas=4)
+    ref = simulate(tr, svc, StaticPolicy(6), **kw)
+    for signal in ("utilization", "queue"):
+        got = simulate(tr, svc, PIPolicy(6, kp=0.0, ki=0.0, signal=signal),
+                       **kw)
+        for f in ("served", "queue", "replicas", "billed_replicas",
+                  "ok_served", "dropped"):
+            np.testing.assert_array_equal(getattr(got, f), getattr(ref, f),
+                                          err_msg=f"field {f!r}")
+
+
+def test_pid_zero_kd_matches_pi():
+    svc = _service()
+    rng = np.random.default_rng(1)
+    pi = PIPolicy(4, kp=6.0, ki=0.8, setpoint=0.6, windup=12.0)
+    pid = PIDPolicy(4, kp=6.0, ki=0.8, kd=0.0, setpoint=0.6, windup=12.0)
+    pi.reset(3)
+    pid.reset(3)
+    for t in range(20):
+        obs = _obs(svc, queue=float(rng.uniform(0, 500)),
+                   util=float(rng.uniform(0, 1)),
+                   rate=float(rng.uniform(0, 100)))
+        np.testing.assert_array_equal(pi.decide(t, obs), pid.decide(t, obs))
+
+
+def test_pi_starvation_floor_and_scale_to_zero():
+    """Zero utilization pins the error negative; the floor keeps one replica
+    while work is queued or arriving, and only a truly idle system may sit
+    at zero replicas."""
+    svc = _service()
+    pi = PIPolicy(1, kp=8.0, ki=2.0, setpoint=0.9, windup=32.0)
+    pi.reset(2)
+    # drive the integrator hard negative on an idle, dead fleet
+    for t in range(30):
+        dead = _obs(svc, queue=0.0, util=0.0, rate=0.0, replicas=0.0,
+                    n_seeds=2)
+        assert (pi.decide(t, dead) == 0).all()     # idle: scale-to-zero is ok
+    starved = _obs(svc, queue=5.0, util=0.0, rate=0.0, replicas=0.0,
+                   n_seeds=2)
+    assert (pi.decide(30, starved) >= 1).all()     # backlog: floor kicks in
+    arriving = _obs(svc, queue=0.0, util=0.0, rate=3.0, replicas=0.0,
+                    n_seeds=2)
+    assert (pi.decide(31, arriving) >= 1).all()
+
+
+def test_pi_windup_clamp_bounds_authority():
+    """Anti-windup: after an arbitrarily long saturated excursion the target
+    stays within n_base + kp*e + ki*windup."""
+    svc = _service()
+    pi = PIPolicy(2, kp=4.0, ki=1.0, setpoint=0.5, windup=8.0)
+    pi.reset(1)
+    sat = _obs(svc, queue=1e6, util=1.0, rate=100.0, replicas=4.0,
+               n_seeds=1)
+    targets = [float(pi.decide(t, sat)[0]) for t in range(200)]
+    cap = 2 + 4.0 * 0.5 + 1.0 * 8.0
+    assert max(targets) <= np.rint(cap)
+    assert targets[-1] == targets[-50]             # settled, not still banking
+
+
+def test_fit_to_usage_follows_observed_usage():
+    svc = _service()
+    pol = FitToUsagePolicy(headroom=0.5, window_bins=3)
+    pol.reset(2)
+    busy = _obs(svc, queue=10.0, util=0.8, rate=5.0, replicas=10.0,
+                n_seeds=2)
+    t0 = pol.decide(0, busy)
+    np.testing.assert_array_equal(t0, np.ceil(0.8 * 10.0 * 1.5))
+    # idle bins age the peak out of the window; starvation guard still holds
+    idle = _obs(svc, queue=0.0, util=0.0, rate=1.0, replicas=12.0, n_seeds=2)
+    for t in range(1, 5):
+        tgt = pol.decide(t, idle)
+    assert (tgt == 1).all()
+    quiet = _obs(svc, queue=0.0, util=0.0, rate=0.0, replicas=1.0, n_seeds=2)
+    assert (pol.decide(5, quiet) == 0).all()
+
+
+def test_feedback_param_spaces_build_valid_policies():
+    for cls in (PIPolicy, PIDPolicy, FitToUsagePolicy):
+        space = cls.param_space()
+        for params in space.sample_lhs(16, seed=3):
+            pol = cls.from_params(params)
+            assert isinstance(pol, cls)
+            for d in space.dims:
+                assert d.lo <= params[d.name] <= d.hi
+    # the PI signal is context, not a dim
+    p = PIPolicy.param_space().sample_lhs(1, seed=0)[0]
+    assert PIPolicy.from_params(p, signal="queue").signal == "queue"
+    with pytest.raises(ValueError):
+        PIPolicy(2, signal="latency")
+    with pytest.raises(ValueError):
+        PIPolicy(2, windup=-1.0)
+    with pytest.raises(ValueError):
+        FitToUsagePolicy(headroom=-0.5)
+
+
+def test_feedback_families_jax_kernels_match_numpy():
+    pytest.importorskip("jax")
+    svc = _service()
+    tr = poisson_trace(4.0 * svc.max_throughput, 500.0, dt_s=5.0,
+                       n_seeds=3, seed=4)
+    kw = dict(slo_s=2.0, cold_start_s=30.0, initial_replicas=4)
+    for pol in (PIPolicy(3, kp=6.0, ki=0.5, setpoint=0.7),
+                PIPolicy(3, kp=4.0, ki=0.5, setpoint=0.4, signal="queue"),
+                PIDPolicy(3, kp=6.0, ki=0.5, kd=1.5, setpoint=0.7),
+                FitToUsagePolicy(headroom=0.4, window_bins=4)):
+        a = simulate(tr, svc, pol, **kw)
+        b = simulate(tr, svc, pol, backend="jax", **kw)
+        for f in ("served", "queue", "replicas", "billed_replicas",
+                  "ok_served", "dropped", "latency_s"):
+            np.testing.assert_allclose(
+                getattr(a, f), getattr(b, f), atol=1e-8, rtol=1e-9,
+                err_msg=f"{pol.name}: field {f!r}")
+
+
+# ------------------------- segmented simulation -----------------------------
+
+def test_segmented_chunking_is_invisible():
+    """One run_until(T) and many small segments produce identical results,
+    and both match the one-shot substep engine."""
+    wl, svc = _workload(duration=500.0)
+    fleet = _fleet(svc)
+    kw = dict(n_substeps=2, cold_start_seed=0)
+
+    one = SegmentedSimulation(wl, fleet, StaticPolicy(6), **kw)
+    one.run_until(one.n_bins)
+    a = one.result()
+
+    many = SegmentedSimulation(wl, fleet, StaticPolicy(6), **kw)
+    for t1 in (1, 7, 30, 31, 64, many.n_bins):
+        many.run_until(t1)
+    b = many.result()
+
+    c = simulate_fleet(wl, fleet, StaticPolicy(6), **kw)
+    for f in ("served", "queue", "replicas", "billed_replicas", "ok_served",
+              "dropped", "latency_s", "utilization"):
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f),
+                                      err_msg=f"chunked: field {f!r}")
+        np.testing.assert_array_equal(getattr(a, f), getattr(c, f),
+                                      err_msg=f"one-shot: field {f!r}")
+
+
+def test_segmented_partial_result_is_a_prefix():
+    wl, svc = _workload(duration=400.0)
+    sim = SegmentedSimulation(wl, _fleet(svc), StaticPolicy(5))
+    with pytest.raises(ValueError):
+        sim.partial_result()               # nothing simulated yet
+    sim.run_until(20)
+    part = sim.partial_result()
+    assert part.served.shape[1] == 20
+    sim.run_until(sim.n_bins)
+    full = sim.result()
+    np.testing.assert_array_equal(part.served, full.served[:, :20])
+    np.testing.assert_array_equal(part.queue, full.queue[:, :20])
+
+
+def test_segmented_policy_swap_takes_effect_at_boundary():
+    wl, svc = _workload(duration=500.0)
+    fleet = _fleet(svc, initial=2, cold_start_s=5.0)
+    sim = SegmentedSimulation(wl, fleet, StaticPolicy(2))
+    sim.run_until(40)
+    q_mid = sim.partial_result().queue[:, 39].copy()
+    sim.swap(policy=StaticPolicy(16))
+    res = sim.run_until(sim.n_bins).result()
+    # the trace is continuous: the backlog at the boundary is carried, and
+    # the new policy's bigger fleet drains it
+    np.testing.assert_array_equal(res.queue[:, 39], q_mid)
+    assert res.replicas[:, :40].max() <= 2
+    assert res.replicas[:, 45:].max() >= 15
+    assert res.queue[:, -1].sum() < q_mid.sum() + 1
+
+
+def test_segmented_swap_guards():
+    wl, svc = _workload(duration=200.0)
+    fleet = _fleet(svc)
+    sim = SegmentedSimulation(wl, fleet, StaticPolicy(4))
+    # fleet swaps must preserve pool identity and pricing
+    other = _fleet(_service(shape="v5e-8"))
+    with pytest.raises(ValueError):
+        sim.swap(fleet=other)
+    two_pools = FleetConfig(fleet.pools + fleet.pools)
+    with pytest.raises(ValueError):
+        sim.swap(fleet=two_pools)
+    # a degraded fleet (same identity, slower service) is the allowed move
+    sim.swap(fleet=degrade_fleet(fleet, 2.0))
+    res = sim.run_until(sim.n_bins).result()
+    assert res.served.shape[1] == sim.n_bins
+    with pytest.raises(ValueError):
+        sim.swap(policy=StaticPolicy(2))   # after the final bin
+    with pytest.raises(ValueError):
+        sim.run_until(1)                   # cannot run backwards
+
+
+# --------------------------- warm-started tuning ----------------------------
+
+def _tuned_static(objective=None, space=None, workload=None, svc=None,
+                  budget=None, name="warm-seed"):
+    if workload is None:
+        workload, svc = _workload()
+    ts = TuningScenario(name=name, workload=workload, fleet=_fleet(svc),
+                        policy_cls=StaticPolicy, context={"slo_s": 2.0},
+                        backend="numpy")
+    space = space or ParamSpace((Integer("n_replicas", 1, 24, log=True),))
+    report = tune(ts, space, objective or Objective(0.95, 2000.0),
+                  budget or TuningBudget(n_candidates=5, init_seeds=1),
+                  seed=0)
+    return ts, space, report
+
+
+def test_warm_start_candidates_anchor_and_perturb():
+    _, space, report = _tuned_static()
+    n = 8
+    cands = warm_start_candidates(report, space, n, seed=0, jitter=0.2)
+    assert len(cands) == n
+    # the incumbent winner comes in verbatim, first
+    assert cands[0] == {k: report.winner.params[k] for k in space.names}
+    # deterministic; a different seed moves the perturbed tail
+    assert cands == warm_start_candidates(report, space, n, seed=0,
+                                          jitter=0.2)
+    assert cands != warm_start_candidates(report, space, n, seed=1,
+                                          jitter=0.2)
+    for cfg in cands:
+        for d in space.dims:
+            assert d.lo <= cfg[d.name] <= d.hi
+        assert isinstance(StaticPolicy.from_params(cfg), StaticPolicy)
+    with pytest.raises(ValueError):
+        warm_start_candidates(report, space, 0)
+
+
+def test_warm_start_untouched_dim_falls_back_to_fresh_draw():
+    """A re-tune may add a knob the incumbent never searched: those dims get
+    stratified fresh draws, and the incumbent cannot anchor (its configs
+    are incomplete in the wider space)."""
+    _, _, report = _tuned_static()
+    wider = ParamSpace((Integer("n_replicas", 1, 24, log=True),
+                        Integer("extra", 2, 9)))
+    cands = warm_start_candidates(report, wider, 6, seed=0)
+    assert len(cands) == 6
+    extras = {c["extra"] for c in cands}
+    assert all(2 <= e <= 9 for e in extras)
+    assert len(extras) > 1          # stratified, not one repeated value
+
+
+def test_tune_warm_start_never_loses_to_incumbent():
+    ts, space, report = _tuned_static()
+    warm = tune(ts, space, report.objective,
+                TuningBudget(n_candidates=4, init_seeds=1), seed=5,
+                warm_start=report)
+    # the incumbent winner is an anchor candidate, so a warm re-tune on the
+    # same scenario can at worst re-race it
+    assert warm.winner.mean_score() \
+        <= report.winner.mean_score() + 1e-9
+
+
+# ------------------------------ window metrics ------------------------------
+
+def test_window_metrics_windows_partition_the_trace():
+    wl, svc = _workload(duration=500.0)
+    res = simulate_fleet(wl, _fleet(svc), StaticPolicy(6))
+    T = res.served.shape[1]
+    full = window_metrics(res, 0)
+    assert full.t1 == T
+    a, b = window_metrics(res, 0, 40), window_metrics(res, 40, T)
+    assert a.usd + b.usd == pytest.approx(full.usd)
+    for wm in (full, a, b):
+        assert 0.0 <= wm.slo_attainment <= 1.0
+        assert wm.worst_class_attainment <= wm.slo_attainment + 1e-12
+        hours = (wm.t1 - wm.t0) * res.dt_s / 3600.0
+        assert wm.usd_per_hour == pytest.approx(wm.usd / hours)
+    with pytest.raises(ValueError):
+        window_metrics(res, 40, 40)
+    with pytest.raises(ValueError):
+        window_metrics(res, -1, 10)
+    with pytest.raises(ValueError):
+        window_metrics(res, 0, T + 1)
+
+
+# ------------------------------- drift probe --------------------------------
+
+def test_drift_probe_false_alarm_rate_on_fresh_seeds():
+    """The probe fit on the model's predicted telemetry must stay quiet on
+    replicate traces it has never seen (fresh arrival seeds, same world)."""
+    pytest.importorskip("jax")
+    wl, svc = _workload(duration=600.0, n_seeds=4, seed=0)
+    fleet = _fleet(svc)
+    probe = DriftProbe()
+    probe.fit(simulate_fleet(wl, fleet, StaticPolicy(6)))
+    for seed in range(7):
+        fresh, _ = _workload(duration=600.0, n_seeds=2, seed=100 + seed)
+        res = simulate_fleet(fresh, fleet, StaticPolicy(6))
+        rep = probe.check(telemetry_matrix(res, probe.signals))
+        assert not rep.drifted, f"false alarm on fresh seed {100 + seed}"
+
+
+# --------------------------- closed-loop controller -------------------------
+
+def _controller(**kw):
+    wl, svc = _workload(duration=600.0)
+    ts, space, report = _tuned_static(workload=wl, svc=svc)
+    ctl = ClosedLoopController(
+        ts, report, segment_bins=15,
+        retune_budget=TuningBudget(n_candidates=6, init_seeds=1),
+        objective=Objective(0.95, 2000.0), **kw)
+    return ctl, wl, ts
+
+
+def test_closed_loop_quiet_run_never_acts():
+    pytest.importorskip("jax")
+    ctl, _, ts = _controller()
+    res = ctl.run()
+    assert res.n_alarms == 0 and res.n_swaps == 0
+    assert not res.swapped
+    assert res.active_params == res.incumbent_params
+    assert res.est_factor == 1.0
+    assert res.retunes == () and res.rescopes == ()
+    assert res.timeline() == "(quiet run)"
+    assert res.sim.served.shape[1] == ts.workload.n_bins
+
+
+def test_closed_loop_detects_and_recovers_from_drift():
+    """The full observe->decide->act loop on an injected service
+    degradation: alarm, warm re-tune, hot-swap, and a post-swap tail that
+    beats riding the incumbent through the same drift."""
+    pytest.importorskip("jax")
+    ctl, wl, ts = _controller()
+    fleet0 = _fleet(_service())
+    case = service_degradation_case(wl, fleet0, factor=3.0, t_drift=60)
+    assert case.drift_bins() == [60]
+    res = ctl.run(case)
+
+    assert res.n_alarms >= 1
+    assert res.est_factor > 1.5            # factor-3 drift, estimated
+    assert res.n_swaps >= 1 and res.swapped
+    assert res.active_params != res.incumbent_params
+    assert res.active_params["n_replicas"] \
+        > res.incumbent_params["n_replicas"]
+    kinds = [e.kind for e in res.events]
+    assert kinds.count("world-change") == 1
+    assert "drift-alarm" in kinds and "retune" in kinds and "swap" in kinds
+    # events are chronological and the swap lands on a segment boundary
+    assert [e.t_bin for e in res.events] == sorted(e.t_bin
+                                                   for e in res.events)
+    swap_bin = next(e.t_bin for e in res.events if e.kind == "swap")
+
+    # ride-through reference: same world, incumbent never reacts
+    ride = SegmentedSimulation(wl, fleet0,
+                               ts.make_policy(res.incumbent_params))
+    ride.run_until(60)
+    ride.swap(fleet=degrade_fleet(fleet0, 3.0))
+    ride_res = ride.run_until(ride.n_bins).result()
+
+    t_rec = min(swap_bin + 8, ts.workload.n_bins - 1)
+    closed = window_metrics(res.sim, t_rec)
+    static = window_metrics(ride_res, t_rec)
+    assert closed.worst_class_attainment > static.worst_class_attainment
+
+
+def test_closed_loop_rejects_misaligned_worlds():
+    ctl, wl, _ = _controller()
+    short, _ = _workload(duration=300.0)
+    with pytest.raises(ValueError):
+        ctl.run(workload=short)
+    case = service_degradation_case(wl, _fleet(_service()), factor=2.0)
+    with pytest.raises(ValueError):
+        ctl.run(case, inject={10: 2.0})    # case and inject are exclusive
+    with pytest.raises(ValueError):
+        service_degradation_case(wl, _fleet(_service()), factor=1.0)
+    with pytest.raises(ValueError):
+        service_degradation_case(wl, _fleet(_service()), factor=2.0,
+                                 t_drift=0)
+
+
+def test_tail_workload_slices_remaining_bins():
+    wl, _ = _workload(duration=400.0)
+    tail = tail_workload(wl, 30)
+    assert tail.n_bins == wl.n_bins - 30
+    np.testing.assert_array_equal(tail.traces[0].arrivals,
+                                  wl.traces[0].arrivals[:, 30:])
+    assert tail.classes == wl.classes
+    with pytest.raises(ValueError):
+        tail_workload(wl, wl.n_bins)
+    with pytest.raises(ValueError):
+        tail_workload(wl, -1)
+
+
+# ------------------------------- the CI gate --------------------------------
+
+def _check_bench():
+    path = os.path.join(os.path.dirname(__file__), "..", "tools",
+                        "check_bench.py")
+    spec = importlib.util.spec_from_file_location("check_bench", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _green_control():
+    return {
+        "benchmark": "closed_loop_control",
+        "drift": {"segment_bins": 15},
+        "headline": {
+            "attainment_bar": 0.95, "incumbent_breaks": True,
+            "recovered": True, "recovery_attainment": 0.98,
+            "closed_loop_usd_per_hour": 32.0, "static_usd_per_hour": 43.0,
+            "cheaper_than_static": True},
+        "closed_loop": {"n_alarms": 1, "n_swaps": 1,
+                        "detection_delay_bins": 15},
+        "incumbent": {"post_drift": {"worst_class_attainment": 0.5}},
+        "agreement": {"same_winner": True, "max_score_delta": 0.0},
+    }
+
+
+def test_compare_control_green_on_matching_runs():
+    cb = _check_bench()
+    fresh = _green_control()
+    assert cb.compare_control(fresh, _green_control(), 0.02, 0.08) == []
+    # no baseline yet (first run): headline invariants still gate
+    assert cb.compare_control(fresh, {}, 0.02, 0.08) == []
+
+
+@pytest.mark.parametrize("mutate,needle", [
+    (lambda d: d["headline"].update(incumbent_breaks=False), "breaks"),
+    (lambda d: d["closed_loop"].update(n_alarms=0), "alarmed"),
+    (lambda d: d["closed_loop"].update(n_swaps=0), "swapped"),
+    (lambda d: d["headline"].update(recovered=False,
+                                    recovery_attainment=0.90), "recover"),
+    (lambda d: d["headline"].update(cheaper_than_static=False), "cheaper"),
+    (lambda d: d["agreement"].update(same_winner=False), "winner"),
+    (lambda d: d["agreement"].update(max_score_delta=1.0), "score"),
+    (lambda d: d["headline"].pop("attainment_bar"), "incomplete"),
+])
+def test_compare_control_flags_each_regression(mutate, needle):
+    cb = _check_bench()
+    fresh = _green_control()
+    mutate(fresh)
+    problems = cb.compare_control(fresh, _green_control(), 0.02, 0.08)
+    assert problems, f"expected a problem containing {needle!r}"
+    assert any(needle in p for p in problems), problems
+
+
+def test_compare_control_baseline_relative_checks():
+    cb = _check_bench()
+    base = _green_control()
+    # attainment erosion beyond tolerance
+    fresh = _green_control()
+    fresh["headline"]["recovery_attainment"] = 0.955
+    assert any("attainment dropped" in p for p in
+               cb.compare_control(fresh, base, 0.02, 0.08))
+    # cost creep beyond tolerance
+    fresh = _green_control()
+    fresh["headline"]["closed_loop_usd_per_hour"] = 40.0
+    assert any("/hr rose" in p for p in
+               cb.compare_control(fresh, base, 0.02, 0.08))
+    # detection slower than one extra control segment
+    fresh = _green_control()
+    fresh["closed_loop"]["detection_delay_bins"] = 45
+    assert any("detection slowed" in p for p in
+               cb.compare_control(fresh, base, 0.02, 0.08))
+    # missing jax: agreement reported, not gated
+    fresh = _green_control()
+    fresh["agreement"] = {"error": "jax not installed"}
+    assert cb.compare_control(fresh, base, 0.02, 0.08) == []

@@ -44,6 +44,19 @@ Simulator-backend gate (``benchmark == "sim_perf"``):
   runs <= 5% slower than with telemetry off — unless the absolute slowdown
   is under the timing-noise grace floor.
 
+Closed-loop control gate (``benchmark == "closed_loop_control"``):
+
+* the incumbent config really breaks under the injected service drift
+  (post-drift worst-class attainment below the bar), and the controller
+  both alarms and hot-swaps a re-tuned policy mid-trace;
+* the closed loop recovers: post-swap worst-class attainment >= the bar
+  (0.95), no worse than the baseline beyond ``--attain-tol``;
+* it recovers cheaper than the cheapest bar-restoring static fleet, and
+  its $/hr has not risen past ``--cost-tol`` vs the baseline;
+* the warm re-tune is backend-exact: numpy and jax return the same winner
+  with scores within tolerance (reported, not gated, where jax is absent);
+* drift detection has not slowed by more than one control segment.
+
 Usage (CI runs exactly this):
 
     python tools/check_bench.py BENCH_fleet.json \\
@@ -52,6 +65,8 @@ Usage (CI runs exactly this):
         --baseline benchmarks/baselines/tuner.json
     python tools/check_bench.py BENCH_sim.json \\
         --baseline benchmarks/baselines/sim.json
+    python tools/check_bench.py BENCH_control.json \\
+        --baseline benchmarks/baselines/control.json
 
 After an intentional perf/cost change, refresh the baseline with
 ``--write-baseline`` and commit the result.
@@ -349,6 +364,89 @@ def _sim_fidelity_problems(fresh: dict) -> list:
     return problems
 
 
+CONTROL_SCORE_TOL = 1e-6        # backend-agreement bar on the re-tune score
+
+
+def compare_control(fresh: dict, base: dict, attain_tol: float,
+                    cost_tol: float) -> list:
+    """Regression strings for a closed-loop control benchmark (empty=green).
+
+    The headline bars are invariants of the fresh run: the incumbent must
+    break under the injected drift, the closed loop must detect it and
+    recover worst-class attainment over the bar at a lower $/hr than the
+    cheapest bar-restoring static fleet, and the warm re-tune must agree
+    across simulator backends. The baseline pins recovery attainment and
+    cost against silent erosion."""
+    head = fresh.get("headline", {})
+    needed = ("attainment_bar", "incumbent_breaks", "recovered",
+              "recovery_attainment", "closed_loop_usd_per_hour",
+              "static_usd_per_hour", "cheaper_than_static")
+    if any(head.get(k) is None for k in needed):
+        return [f"control: headline incomplete (have {sorted(head)})"]
+    problems = []
+    bar = head["attainment_bar"]
+    cl = fresh.get("closed_loop", {})
+    if not head["incumbent_breaks"]:
+        inc_post = fresh.get("incumbent", {}).get("post_drift", {})
+        problems.append(
+            "control: the incumbent no longer breaks under the injected "
+            "drift — the scenario demonstrates nothing (post-drift "
+            f"attainment {inc_post.get('worst_class_attainment')})")
+    if not cl.get("n_alarms", 0) >= 1:
+        problems.append("control: the probe never alarmed on the drifted "
+                        "trace — detection is broken")
+    if not cl.get("n_swaps", 0) >= 1:
+        problems.append("control: the controller never hot-swapped a "
+                        "re-tuned policy — actuation is broken")
+    if not (head["recovered"] and head["recovery_attainment"] >= bar):
+        problems.append(
+            f"control: closed loop failed to recover — post-swap "
+            f"worst-class attainment {head['recovery_attainment']:.4f} "
+            f"< bar {bar}")
+    if not head["cheaper_than_static"]:
+        problems.append(
+            f"control: closed loop no longer cheaper than the static "
+            f"recovery (${head['closed_loop_usd_per_hour']:.2f}/hr vs "
+            f"${head['static_usd_per_hour']}/hr)")
+    agree = fresh.get("agreement", {})
+    if agree.get("error"):
+        pass   # no jax in this environment: reported, not gated
+    else:
+        if not agree.get("same_winner"):
+            problems.append(
+                "control: numpy and jax disagree on the warm re-tune winner "
+                f"({agree.get('numpy_winner')} vs {agree.get('jax_winner')})")
+        delta = agree.get("max_score_delta")
+        if delta is None or not delta <= CONTROL_SCORE_TOL:
+            problems.append(
+                f"control: backends disagree on the re-tune score — delta "
+                f"{delta} (tol {CONTROL_SCORE_TOL})")
+    bhead = base.get("headline", {})
+    if bhead.get("recovery_attainment") is not None:
+        da = bhead["recovery_attainment"] - head["recovery_attainment"]
+        if da > attain_tol:
+            problems.append(
+                f"control: recovery attainment dropped "
+                f"{bhead['recovery_attainment']:.4f} -> "
+                f"{head['recovery_attainment']:.4f} (tol {attain_tol})")
+    if bhead.get("closed_loop_usd_per_hour"):
+        floor = max(bhead["closed_loop_usd_per_hour"], 1e-9)
+        if head["closed_loop_usd_per_hour"] > floor * (1.0 + cost_tol):
+            problems.append(
+                f"control: closed-loop $/hr rose "
+                f"{bhead['closed_loop_usd_per_hour']:.2f} -> "
+                f"{head['closed_loop_usd_per_hour']:.2f} "
+                f"(tol {cost_tol * 100:.0f}%)")
+    bdelay = base.get("closed_loop", {}).get("detection_delay_bins")
+    fdelay = cl.get("detection_delay_bins")
+    seg = fresh.get("drift", {}).get("segment_bins", 0)
+    if bdelay is not None and (fdelay is None or fdelay > bdelay + seg):
+        problems.append(
+            f"control: drift detection slowed — {bdelay} -> {fdelay} bins "
+            f"(tol one segment = {seg} bins)")
+    return problems
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="fail when benchmark results regress vs baseline")
@@ -414,6 +512,29 @@ def main(argv=None) -> int:
               f"{hu.get('coarse_p99_s', 0.0):.1f}s vs fine "
               f"{hu.get('fine_p99_s', 0.0):.1f}s, preemptive EDF meets the "
               "gold bar cheaper than FIFO")
+        return 0
+
+    if fresh.get("benchmark") == "closed_loop_control":
+        problems = compare_control(fresh, base, args.attain_tol,
+                                   args.cost_tol)
+        if problems:
+            print(f"BENCH REGRESSION ({len(problems)} problem(s)):")
+            for p in problems:
+                print(f"  - {p}")
+            return 1
+        head = fresh["headline"]
+        cl = fresh.get("closed_loop", {})
+        agree = fresh.get("agreement", {})
+        agree_note = (f"agreement skipped ({agree['error']})"
+                      if agree.get("error") else
+                      f"backends agree on the re-tune winner (score delta "
+                      f"{agree.get('max_score_delta'):.2e})")
+        print(f"control gate green: incumbent breaks under drift, closed "
+              f"loop recovers {head['recovery_attainment']:.4f} "
+              f">= {head['attainment_bar']} within "
+              f"{cl.get('detection_delay_bins')} bins at "
+              f"${head['closed_loop_usd_per_hour']:.2f}/hr vs static "
+              f"${head['static_usd_per_hour']:.2f}/hr; {agree_note}")
         return 0
 
     if fresh.get("benchmark") == "controller_tuning":

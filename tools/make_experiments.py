@@ -45,7 +45,8 @@ def dryrun_section():
             f"{r.get('peak_memory_per_device', 0)/2**30:.2f}GiB",
             kinds_s,
             "OK" if m.get("status") == "ok" else m.get("status", "—").upper(),
-            f"{m.get('peak_memory_per_device', 0)/2**30:.2f}GiB" if m.get("status") == "ok" else "—",
+            (f"{m.get('peak_memory_per_device', 0)/2**30:.2f}GiB"
+             if m.get("status") == "ok" else "—"),
         ])
     return markdown_table(headers, rows)
 
@@ -89,7 +90,8 @@ def perf_section():
             key[0], key[1], fmt_time(b["t_step"]), fmt_time(o["t_step"]),
             f"{su:.2f}x",
             f"{b.get('useful_flops_ratio') or 0:.3f}→{o.get('useful_flops_ratio') or 0:.3f}",
-            f"{(b.get('roofline_fraction') or 0)*100:.3f}%→{(o.get('roofline_fraction') or 0)*100:.3f}%",
+            (f"{(b.get('roofline_fraction') or 0)*100:.3f}%"
+             f"→{(o.get('roofline_fraction') or 0)*100:.3f}%"),
             f"{b['peak_memory_per_device']/2**30:.1f}→{o['peak_memory_per_device']/2**30:.1f}GiB",
         ])
     return markdown_table(headers, rows)
