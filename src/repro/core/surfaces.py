@@ -12,17 +12,62 @@ import numpy as np
 
 @dataclass
 class ResponseSurface:
+    """Fitted log-log polynomial surface.
+
+    ``box_lo``/``box_hi`` (log-space, per dim) bound the sample the fit saw.
+    A quadratic extrapolated outside its design region grows without bound —
+    silently returning those values poisons anything downstream (a tuner
+    chasing a fictitious minimum, an oracle interpolating a fantasy cost).
+    Queries outside the box are clamped to its hull and flag
+    ``extrapolated`` instead; surfaces built without a box (hand-constructed)
+    keep the old unclamped behaviour.
+    """
     names: list
     coef: np.ndarray
     r2: float
     degree: int
+    box_lo: np.ndarray = None       # (k,) log-space fitted sample min
+    box_hi: np.ndarray = None       # (k,) log-space fitted sample max
+    extrapolated: bool = False      # last predict* clamped at least one query
+
+    def _clamp(self, L: np.ndarray) -> np.ndarray:
+        if self.box_lo is None or self.box_hi is None:
+            self.extrapolated = False
+            return L
+        C = np.clip(L, self.box_lo, self.box_hi)
+        self.extrapolated = bool(np.any(C != L))
+        return C
 
     def predict(self, params: dict) -> float:
         x = np.array([[float(params[n]) for n in self.names]])
-        return float(np.exp(_design(np.log(x), self.degree) @ self.coef)[0])
+        L = self._clamp(np.log(x))
+        return float(np.exp(_design(L, self.degree) @ self.coef)[0])
 
     def predict_many(self, X: np.ndarray) -> np.ndarray:
-        return np.exp(_design(np.log(X), self.degree) @ self.coef)
+        L = self._clamp(np.log(np.asarray(X, float)))
+        return np.exp(_design(L, self.degree) @ self.coef)
+
+    def to_json(self) -> dict:
+        return {
+            "names": list(self.names),
+            "coef": [float(c) for c in np.asarray(self.coef).ravel()],
+            "r2": float(self.r2),
+            "degree": int(self.degree),
+            "box_lo": (None if self.box_lo is None
+                       else [float(v) for v in self.box_lo]),
+            "box_hi": (None if self.box_hi is None
+                       else [float(v) for v in self.box_hi]),
+        }
+
+    @staticmethod
+    def from_json(d: dict) -> "ResponseSurface":
+        return ResponseSurface(
+            names=list(d["names"]), coef=np.asarray(d["coef"], float),
+            r2=float(d["r2"]), degree=int(d["degree"]),
+            box_lo=(None if d.get("box_lo") is None
+                    else np.asarray(d["box_lo"], float)),
+            box_hi=(None if d.get("box_hi") is None
+                    else np.asarray(d["box_hi"], float)))
 
 
 def _design(L: np.ndarray, degree: int) -> np.ndarray:
@@ -67,7 +112,8 @@ def fit_response_surface(names, X, y, degree: int = 2) -> ResponseSurface:
     pred = A @ coef
     ss_res = float(np.sum((ly - pred) ** 2))
     ss_tot = float(np.sum((ly - ly.mean()) ** 2)) or 1.0
-    return ResponseSurface(list(names), coef, 1.0 - ss_res / ss_tot, degree)
+    return ResponseSurface(list(names), coef, 1.0 - ss_res / ss_tot, degree,
+                           box_lo=L.min(axis=0), box_hi=L.max(axis=0))
 
 
 _RAMP = " .:-=+*#%@"

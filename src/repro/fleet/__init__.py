@@ -5,8 +5,14 @@
 # SLO/cost report, closing the loop from the paper's Monte Carlo cost
 # surfaces to fleet operating cost. The tuning subpackage turns the loop on
 # the controller itself: `tune()` autonomously scopes autoscaler/fleet
-# parameters by racing candidate configs through the simulator.
+# parameters by racing candidate configs through the simulator; the oracle
+# subpackage compiles those tuner sweeps into a constant-time lookup service.
 from repro.fleet import control, telemetry
+from repro.fleet.oracle import (OracleAnswer, OracleCell, OracleGrid,
+                                OracleTable, ScopingOracle, TraceFeatures,
+                                VerificationReport, build_oracle,
+                                canonical_trace, featurize, query_latency_us,
+                                verify_oracle)
 from repro.fleet.autoscaler import (FitToUsagePolicy,
                                     HeterogeneousPredictivePolicy, PIDPolicy,
                                     PIPolicy, Policy, PredictivePolicy,
@@ -75,4 +81,7 @@ __all__ = [
     "TuningReport", "TuningScenario", "discipline_dim",
     "evaluate_candidates", "exhaustive", "pareto_frontier", "quota_dims",
     "race", "tune", "tuning_scenario", "telemetry",
+    "OracleAnswer", "OracleCell", "OracleGrid", "OracleTable",
+    "ScopingOracle", "TraceFeatures", "VerificationReport", "build_oracle",
+    "canonical_trace", "featurize", "query_latency_us", "verify_oracle",
 ]

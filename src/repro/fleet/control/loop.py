@@ -15,11 +15,19 @@ telemetry window (per-bin service time, utilization, queue depth) into a
    right one under the degraded service model (hardware is never exchanged
    mid-trace: billing pins pool identity and prices, so a shape downgrade
    is advice for the next deploy, recorded in the result),
-3. **re-tunes**: a budgeted warm-started ``tune()`` over the *remaining*
+3. **consults the scoping oracle** (when one is attached): featurizes the
+   *remaining* workload, inflates the rate axis by the degradation estimate
+   (a fleet serving f-times slower is scoped as f-times the traffic), and
+   looks the regime up in the precompiled :class:`ScopingOracle` table — a
+   microsecond answer. A hit is confirmed with one cheap paired evaluation
+   (active config vs interpolated answer vs nearest-cell winner on the
+   degraded tail) before swapping; only a *miss* (query outside the gridded
+   region) falls through to the expensive path:
+4. **re-tunes**: a budgeted warm-started ``tune()`` over the remaining
    workload under the degraded service model, seeded from the incumbent
    ``TuningReport``'s surviving region (``warm_start_candidates``) on the
    compiled backend, with the incumbent config as the racing baseline,
-4. **acts**: if the re-tuned winner beats the incumbent on the degraded
+5. **acts**: if the chosen winner beats the incumbent on the degraded
    tail, hot-swaps the winning policy at the next segment boundary
    (``SegmentedSimulation.swap``) — the finished trace is still one
    continuous run — then re-fits the probe on the model-predicted post-swap
@@ -42,11 +50,14 @@ from repro.fleet.control.scenario import DriftCase, tail_workload
 from repro.fleet.simulator import SegmentedSimulation, SimResult
 from repro.fleet.telemetry.drift import (DriftProbe, degrade_fleet,
                                          telemetry_matrix)
-from repro.fleet.tuning.evaluate import Objective, TuningScenario
+from repro.fleet.tuning.evaluate import (Objective, TuningScenario,
+                                         evaluate_candidates)
 from repro.fleet.tuning.tuner import TuningBudget, tune
 from repro.fleet.workload import Trace, Workload
 
 _MIN_RETUNE_BINS = 4        # no point re-tuning with nothing left to run
+_MAX_CONSULT_CANDIDATES = 5  # active + interp + top corner winners; keeps
+                             # an oracle consult well under a re-tune's cost
 
 
 @dataclass(frozen=True)
@@ -54,7 +65,7 @@ class ControlEvent:
     """One timeline entry of a closed-loop run."""
     t_bin: int
     kind: str               # world-change | drift-alarm | rescope |
-    #                         retune | swap
+    #                         oracle-hit | oracle-miss | retune | swap
     detail: dict = field(default_factory=dict)
 
     def line(self) -> str:
@@ -75,6 +86,9 @@ class ControlResult:
     est_factor: float        # last degradation estimate (1.0: never alarmed)
     retunes: tuple = ()      # TuningReport per drift response
     rescopes: tuple = ()     # Recommendation per drift response
+    oracle_hits: int = 0     # drift responses answered by the oracle
+    oracle_misses: int = 0   # oracle refusals that fell back to re-tune
+    oracle_answers: tuple = ()   # OracleAnswer per consultation
 
     @property
     def swapped(self) -> bool:
@@ -100,6 +114,12 @@ class ClosedLoopController:
     discipline is pinned for the whole trace (serve-order tables are
     per-run static), so a ``discipline`` dim in a re-tuned winner is
     ignored at swap time.
+
+    ``oracle`` (optional) is a :class:`~repro.fleet.oracle.ScopingOracle`
+    (or a bare :class:`~repro.fleet.oracle.OracleTable`) consulted *before*
+    re-tuning on every drift alarm: a hit replaces the warm re-tune's
+    simulation budget with one paired three-candidate evaluation, a miss
+    (refusal) falls back to the re-tune unchanged.
     """
 
     def __init__(self, scenario: TuningScenario, incumbent, *,
@@ -108,7 +128,7 @@ class ClosedLoopController:
                  retune_budget: TuningBudget = None,
                  objective: Objective = None,
                  min_improvement: float = 0.0, retune_seed: int = 1,
-                 retune_jitter: float = 0.35):
+                 retune_jitter: float = 0.35, oracle=None):
         if int(segment_bins) < 1:
             raise ValueError("segment_bins must be >= 1")
         self.scenario = scenario
@@ -127,6 +147,10 @@ class ClosedLoopController:
         # several times the nominal fleet), while the anchors still keep
         # the incumbent region covered
         self.retune_jitter = float(retune_jitter)
+        if oracle is not None and not hasattr(oracle, "query"):
+            from repro.fleet.oracle import ScopingOracle
+            oracle = ScopingOracle(oracle)
+        self.oracle = oracle
 
     # ---- observe/decide helpers --------------------------------------------
 
@@ -200,6 +224,46 @@ class ClosedLoopController:
                     and report.winner.params != active)
         return report, improved
 
+    def _consult_oracle(self, t1: int, factor: float, workload,
+                        active: dict):
+        """Oracle-first drift response: featurize the remaining workload
+        inflated by the degradation estimate, look it up, and on a hit
+        confirm with ONE paired evaluation on the degraded tail — the
+        active config, the oracle's interpolated answer, and the verbatim
+        winners of the contributing grid corners, strongest weight first
+        (interpolating autoscaler gains between corners can land between
+        two basins; the corner winners are the sweep's actually-validated
+        configs, and under a shape mismatch a lower-weight corner often
+        generalizes where the nearest one does not). A handful of
+        candidates instead of a re-tune's dozens, and the never-worse
+        guarantee survives: the active config races in the same paired
+        draws, so an oracle config only ships if it measurably wins there.
+        Returns (answer, winning params or None, replicates spent)."""
+        tail = tail_workload(workload, t1)
+        ans = self.oracle.query(tail, rate_factor=factor)
+        if not ans.ok:
+            return ans, None, 0
+        cands = [dict(active), dict(ans.params)]
+        ranked = sorted(zip(ans.corner_weights, ans.corner_idx),
+                        key=lambda t: -t[0])
+        for _, ci in ranked:
+            cell = self.oracle.table.cells.get(ci)
+            if cell is None:
+                continue
+            p = dict(cell.winner)
+            if p not in cands:
+                cands.append(p)
+            if len(cands) >= _MAX_CONSULT_CANDIDATES:
+                break
+        evs = evaluate_candidates(self._tail_scenario(t1, factor), cands,
+                                  self.objective)
+        best = min(range(1, len(evs)), key=lambda i: evs[i].mean_score())
+        improved = (evs[best].mean_score()
+                    < evs[0].mean_score() - self.min_improvement
+                    and cands[best] != cands[0])
+        sims = len(cands) * evs[0].n_seeds
+        return ans, (cands[best] if improved else None), sims
+
     def _reference_run(self, workload, fleet, params: dict,
                        discipline) -> SimResult:
         """Model-predicted telemetry: the probe's baseline must come from the
@@ -261,7 +325,9 @@ class ClosedLoopController:
         ref_res, ref_off = base, 0
 
         events, retunes, rescopes = [], [], []
+        oracle_answers = []
         n_alarms = n_swaps = cooldown = 0
+        oracle_hits = oracle_misses = 0
         est_factor = 1.0        # degradation the controller currently models
         warm_report = self.incumbent
         active = dict(self.incumbent_params)
@@ -307,20 +373,53 @@ class ClosedLoopController:
                 if T - t1 < _MIN_RETUNE_BINS:
                     t = t1
                     continue
-                with telemetry.span("control.retune", t_bin=t1,
-                                    factor=est_factor):
-                    report, improved = self._retune(
-                        t1, est_factor, warm_report, active, len(retunes))
-                retunes.append(report)
-                events.append(ControlEvent(t1, "retune", {
-                    "winner": report.winner.params,
-                    "incumbent_score": round(report.baseline.mean_score(), 3),
-                    "winner_score": round(report.winner.mean_score(), 3),
-                    "sims": report.sims_used}))
-                if improved:
-                    sim.swap(policy=scen.make_policy(report.winner.params))
-                    active = dict(report.winner.params)
-                    warm_report = report
+                new_params, report = None, None
+                answered = False
+                if self.oracle is not None:
+                    with telemetry.span("control.oracle", t_bin=t1,
+                                        factor=est_factor):
+                        ans, chosen, eval_sims = self._consult_oracle(
+                            t1, est_factor, workload, active)
+                    oracle_answers.append(ans)
+                    if ans.ok:
+                        oracle_hits += 1
+                        answered = True
+                        telemetry.counter("fleet_control_oracle_hits_total")
+                        events.append(ControlEvent(t1, "oracle-hit", {
+                            "params": dict(ans.params),
+                            "cell": ans.cell_idx,
+                            "latency_us": round(ans.latency_us, 1),
+                            "eval_sims": eval_sims,
+                            "improved": chosen is not None}))
+                        if chosen is not None:
+                            new_params = dict(chosen)
+                    else:
+                        oracle_misses += 1
+                        telemetry.counter(
+                            "fleet_control_oracle_misses_total")
+                        events.append(ControlEvent(t1, "oracle-miss", {
+                            "reason": ans.reason}))
+                if not answered:
+                    with telemetry.span("control.retune", t_bin=t1,
+                                        factor=est_factor):
+                        report, improved = self._retune(
+                            t1, est_factor, warm_report, active,
+                            len(retunes))
+                    retunes.append(report)
+                    events.append(ControlEvent(t1, "retune", {
+                        "winner": report.winner.params,
+                        "incumbent_score":
+                            round(report.baseline.mean_score(), 3),
+                        "winner_score":
+                            round(report.winner.mean_score(), 3),
+                        "sims": report.sims_used}))
+                    if improved:
+                        new_params = dict(report.winner.params)
+                if new_params is not None:
+                    sim.swap(policy=scen.make_policy(new_params))
+                    active = new_params
+                    if report is not None:
+                        warm_report = report
                     n_swaps += 1
                     telemetry.counter("fleet_control_swaps_total")
                     events.append(ControlEvent(t1, "swap",
@@ -340,4 +439,6 @@ class ClosedLoopController:
             sim=sim.result(), events=events, n_alarms=n_alarms,
             n_swaps=n_swaps, incumbent_params=dict(self.incumbent_params),
             active_params=active, est_factor=est_factor,
-            retunes=tuple(retunes), rescopes=tuple(rescopes))
+            retunes=tuple(retunes), rescopes=tuple(rescopes),
+            oracle_hits=oracle_hits, oracle_misses=oracle_misses,
+            oracle_answers=tuple(oracle_answers))

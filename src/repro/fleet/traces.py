@@ -18,11 +18,26 @@ _LOG = logging.getLogger(__name__)
 
 @dataclass(frozen=True)
 class Trace:
-    """Monte Carlo arrival trace: ``arrivals[s, t]`` requests in bin t, seed s."""
+    """Monte Carlo arrival trace: ``arrivals[s, t]`` requests in bin t, seed s.
+
+    ``base_rate`` (optional) is the pre-rescale rate profile: when a loader
+    rescales a recorded trace to a target mean (``load_trace_csv``'s
+    ``mean_rate_per_s=``), the raw profile is kept here so *shape* statistics
+    (peak/mean burstiness, ramp sharpness — the scoping oracle's features)
+    stay bit-identical to the recording instead of drifting by float rounding
+    through the multiply. ``shape_profile`` is what feature extraction reads.
+    """
     name: str
     dt_s: float
     rate: np.ndarray        # (n_bins,) expected requests/s per bin
     arrivals: np.ndarray    # (n_seeds, n_bins) sampled request counts
+    base_rate: np.ndarray = None   # pre-rescale profile (None: rate is raw)
+
+    @property
+    def shape_profile(self) -> np.ndarray:
+        """The profile shape statistics should be computed from: the
+        pre-rescale recording when one exists, else the rate itself."""
+        return self.rate if self.base_rate is None else self.base_rate
 
     @property
     def n_seeds(self) -> int:
@@ -95,9 +110,15 @@ def ramp_trace(rate0_per_s: float, rate1_per_s: float, duration_s: float,
 
 
 def replay_trace(rates_per_s, dt_s: float = 1.0, n_seeds: int = 8, seed: int = 0,
-                 name: str = "replay") -> Trace:
-    """Replay a recorded per-bin rate profile (production traces, CSV columns...)."""
-    return _sample(name, np.asarray(rates_per_s, float), dt_s, n_seeds, seed)
+                 name: str = "replay", base_rate=None) -> Trace:
+    """Replay a recorded per-bin rate profile (production traces, CSV columns...).
+    ``base_rate`` carries the pre-rescale profile when ``rates_per_s`` was
+    rescaled from a recording (see ``Trace.shape_profile``)."""
+    tr = _sample(name, np.asarray(rates_per_s, float), dt_s, n_seeds, seed)
+    if base_rate is None:
+        return tr
+    return Trace(tr.name, tr.dt_s, tr.rate, tr.arrivals,
+                 base_rate=np.asarray(base_rate, float))
 
 
 def resample_trace(trace: Trace, dt_s: float, seed: int = 0) -> Trace:
@@ -131,7 +152,10 @@ def resample_trace(trace: Trace, dt_s: float, seed: int = 0) -> Trace:
         rng = np.random.default_rng((seed, s))
         fine[s] = rng.multinomial(trace.arrivals[s].astype(np.int64),
                                   p).reshape(T * k)
-    return Trace(f"{trace.name}@{dt_s:g}s", float(dt_s), rate, fine)
+    base = (None if trace.base_rate is None
+            else np.repeat(trace.base_rate, k))
+    return Trace(f"{trace.name}@{dt_s:g}s", float(dt_s), rate, fine,
+                 base_rate=base)
 
 
 def load_trace_csv(path, rate_col=1, dt_s: float = 60.0, *, mean_rate_per_s:
@@ -202,14 +226,19 @@ def load_trace_csv(path, rate_col=1, dt_s: float = 60.0, *, mean_rate_per_s:
     if not rates:
         raise ValueError(f"{path}: no data rows")
     rates = np.clip(np.asarray(rates, float), 0.0, None)
-    rescale = 1.0
+    raw, rescale = None, 1.0
     if mean_rate_per_s is not None:
         mean = rates.mean()
         if mean <= 0:
             raise ValueError(f"{path}: all-zero trace cannot be rescaled "
                              f"to mean {mean_rate_per_s}")
         rescale = mean_rate_per_s / mean
-        rates = rates * rescale
+        # the rescaled profile drives sampling, but shape statistics
+        # (burstiness = peak/mean, ramp) must come from the recording: the
+        # per-bin multiply rounds, so peak/mean on the rescaled array can
+        # drift off the recording's by float ulps — enough to miss an exact
+        # oracle grid cell. Keep the raw profile on the Trace.
+        raw, rates = rates, rates * rescale
     stem = os.path.splitext(os.path.basename(str(path)))[0]
     # record what the loader did to the raw profile — a silently rescaled
     # trace is indistinguishable from the recording it came from
@@ -221,7 +250,8 @@ def load_trace_csv(path, rate_col=1, dt_s: float = 60.0, *, mean_rate_per_s:
         _LOG.info("load_trace_csv %s: %d data rows (%d non-data lines "
                   "skipped), mean-rate rescale factor %.6g",
                   path, len(rates), n_skipped, rescale)
-    return replay_trace(rates, dt_s, n_seeds, seed, name=name or stem)
+    return replay_trace(rates, dt_s, n_seeds, seed, name=name or stem,
+                        base_rate=raw)
 
 
 def standard_traces(mean_rate_per_s: float, duration_s: float, dt_s: float = 1.0,

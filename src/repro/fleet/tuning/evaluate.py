@@ -47,6 +47,15 @@ class Objective:
                                0.0)
         return np.asarray(cost_usd_hr) + self.penalty_usd_per_hour * shortfall
 
+    def to_json(self) -> dict:
+        return {"min_attainment": self.min_attainment,
+                "penalty_usd_per_hour": self.penalty_usd_per_hour}
+
+    @staticmethod
+    def from_json(d: dict) -> "Objective":
+        return Objective(min_attainment=float(d["min_attainment"]),
+                         penalty_usd_per_hour=float(d["penalty_usd_per_hour"]))
+
 
 @dataclass
 class CandidateEval:
@@ -106,6 +115,33 @@ class CandidateEval:
         self.drop_rate = np.concatenate([self.drop_rate, other.drop_rate])
         self.score = np.concatenate([self.score, other.score])
         self.sojourns.extend(other.sojourns)
+
+    def to_json(self, include_sojourns: bool = False) -> dict:
+        """Plain-JSON form of this candidate's evidence. Per-request sojourn
+        samples are dropped by default (they dominate the payload and only
+        feed ``p99_s``); pass ``include_sojourns=True`` to keep them."""
+        out = {"params": dict(self.params),
+               "cost_usd_hr": [float(v) for v in self.cost_usd_hr],
+               "attainment": [float(v) for v in self.attainment],
+               "drop_rate": [float(v) for v in self.drop_rate],
+               "score": [float(v) for v in self.score],
+               "n_rounds": int(self.n_rounds)}
+        if include_sojourns:
+            out["sojourns"] = [([float(x) for x in v], [float(x) for x in w])
+                               for v, w in self.sojourns]
+        return out
+
+    @staticmethod
+    def from_json(d: dict) -> "CandidateEval":
+        sojourns = [(np.asarray(v, float), np.asarray(w, float))
+                    for v, w in d.get("sojourns", [])]
+        return CandidateEval(
+            params=dict(d["params"]),
+            cost_usd_hr=np.asarray(d["cost_usd_hr"], float),
+            attainment=np.asarray(d["attainment"], float),
+            drop_rate=np.asarray(d["drop_rate"], float),
+            score=np.asarray(d["score"], float),
+            sojourns=sojourns, n_rounds=int(d.get("n_rounds", 0)))
 
 
 def _slice_trace(tr: Trace, s0: int, s1: int) -> Trace:

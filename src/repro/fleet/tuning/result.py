@@ -158,3 +158,90 @@ class TuningReport:
             return ""
         from repro.fleet.telemetry import render_spans
         return render_spans([self.spans])
+
+    # ---- serialization -----------------------------------------------------
+
+    FORMAT = "tuning-report"
+    VERSION = 1
+
+    def to_json(self, *, include_evals: bool = True,
+                include_spans: bool = False,
+                include_sojourns: bool = False) -> dict:
+        """Plain-JSON form of the report: winner, frontier, the surviving
+        region (``evals`` with their racing-round counts — what
+        ``warm_start_candidates`` and the oracle builder consume), surface,
+        objective and budget. ``_scenario`` is a live object and is never
+        serialized: a loaded report can seed a warm re-tune or an oracle
+        cell but cannot ``build_policy()`` (re-attach a scenario for that).
+        """
+        d = {
+            "format": self.FORMAT,
+            "version": self.VERSION,
+            "scenario_name": self.scenario_name,
+            "policy_family": self.policy_family,
+            "objective": self.objective.to_json(),
+            "winner": self.winner.to_json(include_sojourns=include_sojourns),
+            "frontier": [e.to_json(include_sojourns=include_sojourns)
+                         for e in self.frontier],
+            "baseline": (None if self.baseline is None else
+                         self.baseline.to_json(
+                             include_sojourns=include_sojourns)),
+            "surface": (None if self.surface is None
+                        else self.surface.to_json()),
+            "surface_names": list(self.surface_names),
+            "sims_used": int(self.sims_used),
+            "full_budget": int(self.full_budget),
+            "space": None if self.space is None else self.space.to_json(),
+        }
+        if include_evals:
+            d["evals"] = [e.to_json(include_sojourns=include_sojourns)
+                          for e in self.evals]
+        if include_spans and self.spans is not None:
+            d["spans"] = _span_to_json(self.spans)
+        return d
+
+    @staticmethod
+    def from_json(d: dict) -> "TuningReport":
+        from repro.fleet.tuning.evaluate import CandidateEval, Objective
+        from repro.fleet.tuning.space import ParamSpace
+
+        if d.get("format") != TuningReport.FORMAT:
+            raise ValueError(f"not a tuning report (format="
+                             f"{d.get('format')!r})")
+        if int(d.get("version", -1)) > TuningReport.VERSION:
+            raise ValueError(f"tuning report version {d.get('version')} is "
+                             f"newer than this reader "
+                             f"(<= {TuningReport.VERSION})")
+        surface = (None if d.get("surface") is None
+                   else ResponseSurface.from_json(d["surface"]))
+        return TuningReport(
+            scenario_name=d["scenario_name"],
+            policy_family=d["policy_family"],
+            objective=Objective.from_json(d["objective"]),
+            winner=CandidateEval.from_json(d["winner"]),
+            frontier=tuple(CandidateEval.from_json(e)
+                           for e in d.get("frontier", [])),
+            surface=surface,
+            surface_names=tuple(d.get("surface_names", ())),
+            sims_used=int(d.get("sims_used", 0)),
+            full_budget=int(d.get("full_budget", 0)),
+            baseline=(None if d.get("baseline") is None
+                      else CandidateEval.from_json(d["baseline"])),
+            evals=[CandidateEval.from_json(e) for e in d.get("evals", [])],
+            space=(None if d.get("space") is None
+                   else ParamSpace.from_json(d["space"])),
+            spans=(None if d.get("spans") is None
+                   else _span_from_json(d["spans"])))
+
+
+def _span_to_json(span) -> dict:
+    return {"name": span.name, "attrs": dict(span.attrs),
+            "duration_s": span.duration_s,
+            "children": [_span_to_json(c) for c in span.children]}
+
+
+def _span_from_json(d: dict):
+    from repro.fleet.telemetry.spans import Span
+    return Span(name=d["name"], attrs=dict(d.get("attrs", {})),
+                duration_s=d.get("duration_s"),
+                children=[_span_from_json(c) for c in d.get("children", [])])

@@ -194,6 +194,43 @@ class ParamSpace:
                        for c in configs for v in d.grid(levels)]
         return configs
 
+    def to_json(self) -> list:
+        """JSON-serializable dim list (``OracleTable``/``TuningReport``
+        artifacts carry their search space so a loaded table can interpolate
+        winners in each dim's own unit coordinates)."""
+        return [dim_to_json(d) for d in self.dims]
+
+    @staticmethod
+    def from_json(dims: list) -> "ParamSpace":
+        return ParamSpace(tuple(dim_from_json(d) for d in dims))
+
+
+def dim_to_json(dim: Dim) -> dict:
+    """One dim as a plain JSON object (inverse: ``dim_from_json``)."""
+    if isinstance(dim, Continuous):
+        return {"kind": "continuous", "name": dim.name, "lo": dim.lo,
+                "hi": dim.hi, "log": dim.log}
+    if isinstance(dim, Integer):
+        return {"kind": "integer", "name": dim.name, "lo": dim.lo,
+                "hi": dim.hi, "log": dim.log}
+    if isinstance(dim, Categorical):
+        return {"kind": "categorical", "name": dim.name,
+                "choices": list(dim.choices)}
+    raise TypeError(f"cannot serialize dim type {type(dim).__name__}")
+
+
+def dim_from_json(d: dict) -> Dim:
+    kind = d.get("kind")
+    if kind == "continuous":
+        return Continuous(d["name"], float(d["lo"]), float(d["hi"]),
+                          bool(d.get("log", False)))
+    if kind == "integer":
+        return Integer(d["name"], int(d["lo"]), int(d["hi"]),
+                       bool(d.get("log", False)))
+    if kind == "categorical":
+        return Categorical(d["name"], tuple(d["choices"]))
+    raise ValueError(f"unknown dim kind {kind!r}")
+
 
 # ---- cross-cutting dims (simulation-level, routed by the evaluator) --------
 

@@ -1,0 +1,470 @@
+"""Scoping oracle subsystem: trace featurization invariants, the canonical
+trace solve, offline sweep build + versioned serialization, interpolated
+microsecond queries with principled refusals, the spot-check verifier, the
+closed-loop oracle consult, and the CI gate for the oracle benchmark."""
+import importlib.util
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (CellResult, RooflineTerms, fit_response_surface,
+                        get_shape)
+from repro.fleet import (FleetConfig, Objective, OracleGrid, OracleTable,
+                         PIPolicy, PoolConfig, ScopingOracle, TraceFeatures,
+                         TuningBudget, TuningReport, TuningScenario, Workload,
+                         build_oracle, canonical_trace, featurize,
+                         flash_crowd_trace, load_trace_csv, poisson_trace,
+                         query_latency_us, resample_trace,
+                         service_model_from_cell, tune, verify_oracle,
+                         warm_start_candidates)
+from repro.fleet.control import (ClosedLoopController,
+                                 service_degradation_case)
+
+
+def _cell(shape="v5e-4", t_comp=0.4, t_mem=0.1, t_coll=0.05, batch=64):
+    return CellResult(params={"batch": batch,
+                              "chips": get_shape(shape).chips},
+                      shape_name=shape,
+                      terms=RooflineTerms(t_comp, t_mem, t_coll),
+                      analysis={"peak_memory_per_device": 1e9})
+
+
+def _service(**kw):
+    return service_model_from_cell(_cell(**kw),
+                                   units_per_step=kw.get("batch", 64))
+
+
+def _fleet(svc, initial=8, max_replicas=24, cold_start_s=30.0):
+    return FleetConfig((PoolConfig(service=svc, cold_start_s=cold_start_s,
+                                   initial_replicas=initial,
+                                   max_replicas=max_replicas),))
+
+
+@pytest.fixture(scope="module")
+def small_oracle():
+    """One tiny 2x2x2 table shared across query/verify tests (building is
+    the expensive part; queries are microseconds)."""
+    svc = _service()
+    fleet = _fleet(svc)
+    mt = svc.max_throughput
+    grid = OracleGrid(mean_rates=(2.0 * mt, 4.0 * mt),
+                      burstiness=(1.0, 1.8), slos=(1.0, 3.0),
+                      duration_s=400.0, dt_s=5.0, n_seeds=2, seed=3)
+    table = build_oracle(grid, fleet, PIPolicy, PIPolicy.param_space(),
+                         objective=Objective(min_attainment=0.9),
+                         budget=TuningBudget(n_candidates=5, init_seeds=1),
+                         backend="numpy")
+    return table, fleet, svc
+
+
+# ------------------------- featurization invariants -------------------------
+
+def test_featurize_seed_invariant():
+    """Features read the rate *profile*, never the sampled arrivals: any
+    seed / replicate count yields identical features."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed_a=st.integers(0, 2**31), seed_b=st.integers(0, 2**31),
+           peak=st.floats(1.1, 6.0, allow_nan=False),
+           rate=st.floats(10.0, 1e6, allow_nan=False))
+    def prop(seed_a, seed_b, peak, rate):
+        kw = dict(duration_s=300.0, dt_s=5.0, peak_mult=peak,
+                  burst_width_s=40.0)
+        fa = featurize(flash_crowd_trace(rate, n_seeds=2, seed=seed_a, **kw))
+        fb = featurize(flash_crowd_trace(rate, n_seeds=5, seed=seed_b, **kw))
+        assert fa == fb
+
+    prop()
+
+
+def test_featurize_rescale_equivariant():
+    """Rescaling traffic c-fold multiplies mean_rate by c and leaves the
+    shape features (burstiness, ramp, mix) untouched."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=10, deadline=None)
+    @given(c=st.floats(0.1, 50.0, allow_nan=False),
+           peak=st.floats(1.1, 6.0, allow_nan=False))
+    def prop(c, peak):
+        kw = dict(duration_s=300.0, dt_s=5.0, peak_mult=peak,
+                  burst_width_s=40.0, n_seeds=2, seed=0)
+        f1 = featurize(flash_crowd_trace(1000.0, **kw))
+        fc = featurize(flash_crowd_trace(1000.0 * c, **kw))
+        assert fc.mean_rate == pytest.approx(c * f1.mean_rate, rel=1e-9)
+        assert fc.burstiness == pytest.approx(f1.burstiness, rel=1e-9)
+        assert fc.ramp == pytest.approx(f1.ramp, rel=1e-9)
+        sc = f1.scaled(c)
+        assert fc.burstiness == sc.burstiness and fc.ramp == sc.ramp
+
+    prop()
+
+
+def test_featurize_resample_invariant():
+    tr = flash_crowd_trace(500.0, 300.0, dt_s=10.0, peak_mult=3.0,
+                           burst_width_s=40.0, n_seeds=2, seed=1)
+    f0, f1 = featurize(tr), featurize(resample_trace(tr, 2.5))
+    assert f1.burstiness == pytest.approx(f0.burstiness, rel=1e-9)
+    assert f1.mean_rate == pytest.approx(f0.mean_rate, rel=1e-9)
+
+
+def test_csv_rescale_keeps_shape_profile(tmp_path):
+    """Regression pin: ``load_trace_csv(..., mean_rate_per_s=)`` must
+    featurize identically to the unrescaled recording (modulo mean_rate) —
+    the rescale used to overwrite the profile the shape stats read."""
+    p = tmp_path / "trace.csv"
+    rates = [100.0, 120.0, 400.0, 150.0, 90.0, 140.0]
+    p.write_text("t,rate\n" + "\n".join(f"{i},{r}"
+                                        for i, r in enumerate(rates)) + "\n")
+    raw = load_trace_csv(p, rate_col="rate", dt_s=30.0, n_seeds=2)
+    scaled = load_trace_csv(p, rate_col="rate", dt_s=30.0, n_seeds=2,
+                            mean_rate_per_s=5000.0)
+    f_raw, f_scaled = featurize(raw), featurize(scaled)
+    assert f_scaled.mean_rate == pytest.approx(5000.0, rel=1e-9)
+    assert f_scaled.burstiness == pytest.approx(f_raw.burstiness, rel=1e-12)
+    assert f_scaled.ramp == pytest.approx(f_raw.ramp, rel=1e-12)
+    np.testing.assert_allclose(scaled.shape_profile, raw.rate)
+
+
+# ------------------------------ canonical trace -----------------------------
+
+@pytest.mark.parametrize("target", [1.0, 1.4, 2.5, 4.0])
+def test_canonical_trace_realizes_features(target):
+    tr = canonical_trace(2000.0, target, duration_s=600.0, dt_s=5.0,
+                         n_seeds=2, seed=7)
+    f = featurize(tr)
+    assert f.mean_rate == pytest.approx(2000.0, rel=1e-9)
+    assert f.burstiness == pytest.approx(target, rel=1e-6)
+
+
+def test_canonical_trace_infeasible_burstiness_raises():
+    with pytest.raises(ValueError, match="burstiness"):
+        canonical_trace(2000.0, 50.0, duration_s=600.0, dt_s=5.0)
+
+
+# ----------------------- table build + serialization ------------------------
+
+def test_oracle_grid_validation():
+    with pytest.raises(ValueError):
+        OracleGrid(mean_rates=(100.0, 50.0), burstiness=(1.0,), slos=(1.0,))
+    with pytest.raises(ValueError):
+        OracleGrid(mean_rates=(100.0,), burstiness=(0.5,), slos=(1.0,))
+
+
+def test_table_roundtrip_and_version_check(small_oracle, tmp_path):
+    table, _, _ = small_oracle
+    path = tmp_path / "oracle.json"
+    table.save(path)
+    loaded = OracleTable.load(path)
+    assert set(loaded.cells) == set(table.cells)
+    for idx, cell in table.cells.items():
+        assert loaded.cells[idx].winner == cell.winner
+        assert loaded.cells[idx].score == pytest.approx(cell.score)
+    d = json.loads(path.read_text())
+    d["version"] = 999
+    with pytest.raises(ValueError, match="version"):
+        OracleTable.from_json(d)
+    d = json.loads(path.read_text())
+    d["format"] = "something-else"
+    with pytest.raises(ValueError, match="format"):
+        OracleTable.from_json(d)
+
+
+# ----------------------------------- queries --------------------------------
+
+def test_exact_grid_point_is_verbatim(small_oracle):
+    table, _, _ = small_oracle
+    oracle = ScopingOracle(table)
+    for idx, cell in table.cells.items():
+        ans = oracle.query(TraceFeatures(cell.mean_rate, cell.burstiness,
+                                         0.0), cell.slo_s)
+        assert ans.ok and ans.exact
+        assert ans.cell_idx == idx
+        assert ans.params == cell.winner
+        assert ans.cost_usd_hr == pytest.approx(cell.cost_usd_hr)
+
+
+def test_interpolated_query_bounds_and_corners(small_oracle):
+    table, _, _ = small_oracle
+    g = table.grid
+    oracle = ScopingOracle(table)
+    q = TraceFeatures(float(np.sqrt(g.mean_rates[0] * g.mean_rates[1])),
+                      0.5 * (g.burstiness[0] + g.burstiness[1]), 0.0)
+    ans = oracle.query(q, float(np.sqrt(g.slos[0] * g.slos[1])))
+    assert ans.ok and not ans.exact
+    assert len(ans.corner_idx) == 8
+    assert sum(ans.corner_weights) == pytest.approx(1.0)
+    costs = [table.cells[c].cost_usd_hr for c in ans.corner_idx]
+    assert min(costs) - 1e-9 <= ans.cost_usd_hr <= max(costs) + 1e-9
+    assert ans.cost_bound_usd_hr == pytest.approx(max(
+        c for c, w in zip(costs, ans.corner_weights) if w > 1e-12))
+    # interpolated params stay inside each dim's range
+    for dim in table.space.dims:
+        v = ans.params[dim.name]
+        assert dim.lo <= v <= dim.hi
+
+
+def test_refusal_outside_hull_names_axis(small_oracle):
+    table, _, _ = small_oracle
+    g = table.grid
+    oracle = ScopingOracle(table)
+    ans = oracle.query(TraceFeatures(g.mean_rates[-1] * 100.0, 1.2, 0.0), 2.0)
+    assert not ans.ok and "mean_rate" in ans.reason
+    ans = oracle.query(TraceFeatures(g.mean_rates[0], 50.0, 0.0), 2.0)
+    assert not ans.ok and "burstiness" in ans.reason
+    ans = oracle.query(TraceFeatures(g.mean_rates[0], 1.2, 0.0),
+                       g.slos[-1] * 100.0)
+    assert not ans.ok and "slo" in ans.reason
+    # refusals are answers, not exceptions — and falsy
+    assert bool(ans) is False
+
+
+def test_query_latency_is_fast(small_oracle):
+    table, _, _ = small_oracle
+    oracle = ScopingOracle(table)
+    g = table.grid
+    stats = query_latency_us(
+        oracle, TraceFeatures(g.mean_rates[0] * 1.3, 1.2, 0.0), 2.0, n=50)
+    assert stats["n"] == 50
+    # generous CI bound; the bench gate pins the real (<=1ms) bar
+    assert stats["median_us"] < 50_000
+
+
+def test_slo_monotone_interpolated_score():
+    """Looser deadline can only help: with racing disabled every SLO tier
+    in a column scores the same candidate set, so the per-cell winner score
+    is non-increasing in slo — and piecewise-linear interpolation between
+    those nodes preserves the monotonicity."""
+    svc = _service()
+    fleet = _fleet(svc)
+    mt = svc.max_throughput
+    grid = OracleGrid(mean_rates=(3.0 * mt,), burstiness=(1.5,),
+                      slos=(1.0, 2.0, 4.0), duration_s=400.0, dt_s=5.0,
+                      n_seeds=2, seed=11)
+    table = build_oracle(grid, fleet, PIPolicy, PIPolicy.param_space(),
+                         objective=Objective(min_attainment=0.9),
+                         budget=TuningBudget(n_candidates=4, racing=False),
+                         backend="numpy")
+    scores = [table.cells[(0, 0, k)].score for k in range(3)]
+    assert scores[0] >= scores[1] - 1e-9 >= scores[2] - 2e-9
+    oracle = ScopingOracle(table)
+    q = TraceFeatures(3.0 * mt, 1.5, 0.0)
+    interp = [oracle.query(q, s).score
+              for s in np.geomspace(1.0, 4.0, 9)]
+    assert all(a >= b - 1e-9 for a, b in zip(interp, interp[1:]))
+
+
+# ------------------------------- verification -------------------------------
+
+def test_verify_oracle_spot_checks(small_oracle):
+    table, fleet, _ = small_oracle
+    report = verify_oracle(table, fleet, PIPolicy, n_samples=2, seed=5,
+                           backend="numpy")
+    assert report.n + report.refused == 2
+    d = report.to_json()
+    assert "max_cost_overrun" in d and "max_cost_err" in d
+    for c in report.checks:
+        assert np.isfinite(c.simulated_cost)
+        assert c.cost_overrun >= 0.0
+    # within-bound simulations report zero overrun
+    if report.n:
+        assert report.max_cost_overrun <= max(
+            0.0, max(c.cost_overrun for c in report.checks))
+
+
+# -------------------- TuningReport round-trip (satellite) -------------------
+
+def test_tuning_report_json_roundtrip():
+    svc = _service()
+    tr = poisson_trace(2.0 * svc.max_throughput, 300.0, dt_s=5.0, n_seeds=2,
+                       seed=0)
+    scen = TuningScenario(name="rt", workload=Workload.from_trace(tr, 2.0),
+                          fleet=_fleet(svc), policy_cls=PIPolicy,
+                          context={"slo_s": 2.0}, backend="numpy")
+    space = PIPolicy.param_space()
+    report = tune(scen, space, Objective(min_attainment=0.9),
+                  TuningBudget(n_candidates=4, init_seeds=1), seed=1)
+    back = TuningReport.from_json(json.loads(json.dumps(report.to_json())))
+    assert back.winner.params == report.winner.params
+    assert back.winner.mean_score() == pytest.approx(
+        report.winner.mean_score())
+    assert back.scenario_name == report.scenario_name
+    # a deserialized report can warm-start a re-tune
+    cands = warm_start_candidates(back, space, 4, seed=2)
+    assert cands[0] == report.winner.params
+    assert len(cands) == 4
+
+
+# ------------------ ResponseSurface hull clamp (satellite) ------------------
+
+def test_response_surface_clamps_and_flags():
+    rng = np.random.default_rng(0)
+    X = rng.uniform(1.0, 10.0, size=(40, 2))
+    y = 3.0 * X[:, 0] ** 1.5 * X[:, 1] ** 0.5
+    surf = fit_response_surface(["a", "b"], X, y)
+    inside = surf.predict({"a": 5.0, "b": 5.0})
+    assert not surf.extrapolated
+    far = surf.predict({"a": 1e6, "b": 5.0})
+    assert surf.extrapolated
+    # clamped to the hull: identical to evaluating at the box edge
+    edge = surf.predict({"a": float(np.exp(surf.box_hi[0])), "b": 5.0})
+    assert far == pytest.approx(edge)
+    assert np.isfinite(inside) and np.isfinite(far)
+
+
+# ------------------------- closed-loop oracle consult -----------------------
+
+def _drift_setup(slo_s=2.0, rate_mult=2.5):
+    svc = _service()
+    fleet = _fleet(svc)
+    tr = poisson_trace(rate_mult * svc.max_throughput, 600.0, dt_s=5.0,
+                       n_seeds=2, seed=0)
+    wl = Workload.from_trace(tr, slo_s)
+    case = service_degradation_case(wl, fleet, factor=1.6, t_drift_frac=0.4)
+    scen = TuningScenario(name="cl", workload=wl, fleet=fleet,
+                          policy_cls=PIPolicy, context={"slo_s": slo_s},
+                          backend="numpy")
+    incumbent = tune(scen, PIPolicy.param_space(),
+                     Objective(min_attainment=0.9),
+                     TuningBudget(n_candidates=4, init_seeds=1), seed=0)
+    return svc, fleet, case, scen, incumbent
+
+
+def test_controller_oracle_hit_swaps_without_retune():
+    svc, fleet, case, scen, incumbent = _drift_setup()
+    mt = svc.max_throughput
+    # hull wide enough that the degradation-inflated query lands inside
+    grid = OracleGrid(mean_rates=(1.5 * mt, 8.0 * mt), burstiness=(1.0, 1.6),
+                      slos=(1.0, 4.0), duration_s=400.0, dt_s=5.0,
+                      n_seeds=2, seed=3)
+    table = build_oracle(grid, fleet, PIPolicy, PIPolicy.param_space(),
+                         objective=Objective(min_attainment=0.9),
+                         budget=TuningBudget(n_candidates=5, init_seeds=1),
+                         backend="numpy")
+    ctl = ClosedLoopController(scen, incumbent, segment_bins=30,
+                               oracle=ScopingOracle(table),
+                               objective=Objective(min_attainment=0.9))
+    res = ctl.run(case)
+    assert res.oracle_hits >= 1
+    assert res.oracle_misses == 0
+    hit = next(e for e in res.events if e.kind == "oracle-hit")
+    assert hit.detail["latency_us"] > 0
+    assert hit.detail["eval_sims"] > 0
+    assert len(res.oracle_answers) == res.oracle_hits
+    # an oracle hit answers the alarm without spending a warm re-tune
+    assert all(e.kind != "retune" for e in res.events)
+    assert not res.retunes
+
+
+def test_controller_oracle_miss_falls_back_to_retune():
+    svc, fleet, case, scen, incumbent = _drift_setup()
+    mt = svc.max_throughput
+    # hull deliberately excludes the inflated query -> refusal -> re-tune
+    grid = OracleGrid(mean_rates=(0.1 * mt, 0.2 * mt), burstiness=(1.0, 1.1),
+                      slos=(1.0, 4.0), duration_s=400.0, dt_s=5.0,
+                      n_seeds=2, seed=3)
+    table = build_oracle(grid, fleet, PIPolicy, PIPolicy.param_space(),
+                         objective=Objective(min_attainment=0.9),
+                         budget=TuningBudget(n_candidates=3, init_seeds=1),
+                         backend="numpy")
+    ctl = ClosedLoopController(scen, incumbent, segment_bins=30,
+                               oracle=ScopingOracle(table),
+                               objective=Objective(min_attainment=0.9))
+    res = ctl.run(case)
+    assert res.oracle_misses >= 1 and res.oracle_hits == 0
+    miss = next(e for e in res.events if e.kind == "oracle-miss")
+    assert "mean_rate" in miss.detail["reason"]
+    # the miss did not disable recovery: the warm re-tune path still ran
+    assert res.retunes
+
+
+def test_controller_accepts_bare_table():
+    """oracle= accepts an OracleTable directly (wrapped internally)."""
+    svc, fleet, case, scen, incumbent = _drift_setup()
+    mt = svc.max_throughput
+    grid = OracleGrid(mean_rates=(1.5 * mt, 8.0 * mt), burstiness=(1.0, 1.6),
+                      slos=(1.0, 4.0), duration_s=400.0, dt_s=5.0,
+                      n_seeds=2, seed=3)
+    table = build_oracle(grid, fleet, PIPolicy, PIPolicy.param_space(),
+                         objective=Objective(min_attainment=0.9),
+                         budget=TuningBudget(n_candidates=3, init_seeds=1),
+                         backend="numpy")
+    ctl = ClosedLoopController(scen, incumbent, segment_bins=30, oracle=table,
+                               objective=Objective(min_attainment=0.9))
+    assert isinstance(ctl.oracle, ScopingOracle)
+
+
+# --------------------------------- CI gate ----------------------------------
+
+def _load_check_bench():
+    path = os.path.join(os.path.dirname(__file__), os.pardir, "tools",
+                        "check_bench.py")
+    spec = importlib.util.spec_from_file_location("check_bench_oracle", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _green_oracle():
+    return {
+        "benchmark": "scoping_oracle",
+        "build": {"n_cells": 36, "sims_used": 700,
+                  "tune_equivalents": 20.0, "wall_s": 30.0},
+        "latency": {"median_us": 200.0, "p99_us": 400.0, "max_us": 900.0,
+                    "n": 200},
+        "heldout": {"attainment_bar": 0.95, "regret": 0.02,
+                    "oracle": {"attainment": 0.97, "cost_usd_hr": 28.0,
+                               "score": 28.0},
+                    "fresh": {"attainment": 0.98, "cost_usd_hr": 27.5,
+                              "score": 27.5}},
+        "verify": {"n": 3, "refused": 0, "max_cost_err": 0.12,
+                   "max_cost_overrun": 0.0, "mean_cost_err": 0.06,
+                   "max_attainment_err": 0.01},
+        "agreement": {"max_score_delta": 0.0},
+        "closed_loop": {
+            "attainment_bar": 0.95,
+            "retune": {"swap_bin": 105, "post_drift_usd_per_hour": 32.0,
+                       "recovery_attainment": 0.98, "tune_sims": 32},
+            "oracle": {"swap_bin": 105, "post_drift_usd_per_hour": 33.0,
+                       "recovery_attainment": 0.98, "hits": 1, "misses": 0,
+                       "consult_sims": 30},
+        },
+    }
+
+
+def test_compare_oracle_green():
+    cb = _load_check_bench()
+    fresh = _green_oracle()
+    assert cb.compare_oracle(fresh, _green_oracle(), 0.02, 0.08) == []
+
+
+@pytest.mark.parametrize("mutate,needle", [
+    (lambda d: d["latency"].__setitem__("median_us", 5000.0), "latency"),
+    (lambda d: d["heldout"].__setitem__("regret", 0.5), "regret"),
+    (lambda d: d["heldout"]["oracle"].__setitem__("attainment", 0.5),
+     "attainment"),
+    (lambda d: d["build"].__setitem__("tune_equivalents", 500.0),
+     "amortize"),
+    (lambda d: d["verify"].__setitem__("max_cost_overrun", 0.5), "bound"),
+    (lambda d: d["verify"].__setitem__("refused", 1), "refusal"),
+    (lambda d: d["closed_loop"]["oracle"].__setitem__("swap_bin", 150),
+     "LATER"),
+    (lambda d: d["closed_loop"]["oracle"].__setitem__(
+        "recovery_attainment", 0.5), "bar"),
+    (lambda d: d["closed_loop"]["oracle"].__setitem__("consult_sims", 999),
+     "cheaper"),
+    (lambda d: d["closed_loop"]["oracle"].__setitem__("hits", 0), "hit"),
+    (lambda d: d["agreement"].__setitem__("max_score_delta", 1.0),
+     "disagree"),
+])
+def test_compare_oracle_red(mutate, needle):
+    cb = _load_check_bench()
+    fresh = _green_oracle()
+    mutate(fresh)
+    problems = cb.compare_oracle(fresh, _green_oracle(), 0.02, 0.08)
+    assert problems, f"expected a problem mentioning {needle!r}"
+    assert any(needle.lower() in p.lower() for p in problems), problems

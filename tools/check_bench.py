@@ -57,6 +57,22 @@ Closed-loop control gate (``benchmark == "closed_loop_control"``):
   with scores within tolerance (reported, not gated, where jax is absent);
 * drift detection has not slowed by more than one control segment.
 
+Scoping-oracle gate (``benchmark == "scoping_oracle"``):
+
+* the oracle answers in <= 1 ms median query latency (featurization
+  included);
+* on the held-out flash-crowd trace the oracle's config simulates within
+  10% regret of a fresh ``tune()`` at the same attainment bar, and meets
+  the bar itself;
+* the offline build amortizes: total sweep simulations <= one fresh-tune
+  equivalent per grid cell (racing must pay for the table);
+* the spot-check verifier passes: no refusals inside the hull, cost
+  prediction error within its bound;
+* the closed loop with ``oracle=`` recovers from the headline drift case
+  no later than warm re-tune alone — and when it swaps at the same
+  segment, no costlier — while spending a fraction of the re-tune's
+  simulations; numpy and jax agree on the held-out evaluation.
+
 Usage (CI runs exactly this):
 
     python tools/check_bench.py BENCH_fleet.json \\
@@ -67,6 +83,8 @@ Usage (CI runs exactly this):
         --baseline benchmarks/baselines/sim.json
     python tools/check_bench.py BENCH_control.json \\
         --baseline benchmarks/baselines/control.json
+    python tools/check_bench.py BENCH_oracle.json \\
+        --baseline benchmarks/baselines/oracle.json
 
 After an intentional perf/cost change, refresh the baseline with
 ``--write-baseline`` and commit the result.
@@ -447,6 +465,156 @@ def compare_control(fresh: dict, base: dict, attain_tol: float,
     return problems
 
 
+ORACLE_MAX_MEDIAN_LATENCY_US = 1000.0   # <= 1 ms median query (ISSUE 9)
+ORACLE_MAX_REGRET = 0.10                # held-out score within 10% of tune()
+ORACLE_MAX_TUNE_EQUIV_PER_CELL = 1.0    # build amortization bar
+ORACLE_MAX_VERIFY_COST_ERR = 0.25       # spot-check |prediction| error: the
+                                        # interpolated point cost between
+                                        # cells with unlike winners skews
+                                        # conservative (over-predicts)
+ORACLE_MAX_VERIFY_OVERRUN = 0.05        # simulated cost vs answered bound —
+                                        # the direction that mis-scopes
+ORACLE_SCORE_TOL = 1e-6                 # backend-agreement bar
+ORACLE_CL_COST_TOL = 0.10               # same-segment recovery cost slack
+                                        # (mirrors the 10% regret bar: the
+                                        # consult picks from ~5 precomputed
+                                        # configs, not a fresh sweep)
+
+
+def compare_oracle(fresh: dict, base: dict, attain_tol: float,
+                   cost_tol: float) -> list:
+    """Regression strings for a scoping-oracle benchmark (empty=green).
+
+    The latency, regret, amortization, verifier and closed-loop bars are
+    invariants of the fresh run; the baseline pins the held-out answer's
+    cost and attainment against silent erosion."""
+    problems = []
+    lat = fresh.get("latency", {})
+    med = lat.get("median_us")
+    if med is None:
+        problems.append("oracle: latency section missing")
+    elif not med <= ORACLE_MAX_MEDIAN_LATENCY_US:
+        problems.append(
+            f"oracle: median query latency {med:.0f}us over the "
+            f"{ORACLE_MAX_MEDIAN_LATENCY_US:.0f}us bar — no longer a "
+            "constant-time lookup")
+    ho = fresh.get("heldout", {})
+    orc, fr = ho.get("oracle"), ho.get("fresh")
+    bar = ho.get("attainment_bar")
+    if not orc or not fr or bar is None:
+        problems.append(f"oracle: heldout section incomplete "
+                        f"(have {sorted(ho)})")
+    else:
+        if orc["attainment"] < bar:
+            problems.append(
+                f"oracle: held-out answer misses the attainment bar "
+                f"({orc['attainment']:.4f} < {bar})")
+        regret = ho.get("regret")
+        if regret is None or not regret <= ORACLE_MAX_REGRET:
+            problems.append(
+                f"oracle: held-out regret {regret} vs fresh tune() over the "
+                f"{ORACLE_MAX_REGRET * 100:.0f}% bar (oracle score "
+                f"{orc.get('score')}, tune score {fr.get('score')})")
+    build = fresh.get("build", {})
+    teq, ncells = build.get("tune_equivalents"), build.get("n_cells")
+    if teq is None or ncells is None:
+        problems.append("oracle: build section incomplete "
+                        f"(have {sorted(build)})")
+    elif not teq <= ncells * ORACLE_MAX_TUNE_EQUIV_PER_CELL:
+        problems.append(
+            f"oracle: build spent {teq:.1f} fresh-tune equivalents for "
+            f"{ncells} cells (bar {ORACLE_MAX_TUNE_EQUIV_PER_CELL:g} per "
+            "cell) — the sweep no longer amortizes")
+    ver = fresh.get("verify", {})
+    if not ver.get("n", 0) >= 1:
+        problems.append("oracle: verifier ran no spot-checks")
+    else:
+        if ver.get("refused", 0) != 0:
+            problems.append(
+                f"oracle: verifier hit {ver['refused']} refusal(s) inside "
+                "the gridded region — the hull check is broken")
+        err = ver.get("max_cost_err")
+        if err is None or not err <= ORACLE_MAX_VERIFY_COST_ERR:
+            problems.append(
+                f"oracle: verifier max cost error {err} over the "
+                f"{ORACLE_MAX_VERIFY_COST_ERR * 100:.0f}% bound")
+        over = ver.get("max_cost_overrun")
+        if over is None or not over <= ORACLE_MAX_VERIFY_OVERRUN:
+            problems.append(
+                f"oracle: simulated cost busts the answered bound by "
+                f"{over} (tol {ORACLE_MAX_VERIFY_OVERRUN * 100:.0f}%) — "
+                "the oracle under-promises capacity")
+    problems += _oracle_closed_loop_problems(fresh)
+    agree = fresh.get("agreement", {})
+    if agree.get("error"):
+        pass   # no jax in this environment: reported, not gated
+    else:
+        delta = agree.get("max_score_delta")
+        if delta is None or not delta <= ORACLE_SCORE_TOL:
+            problems.append(
+                f"oracle: backends disagree on the held-out evaluation — "
+                f"max score delta {delta} (tol {ORACLE_SCORE_TOL})")
+    bho = base.get("heldout", {}).get("oracle")
+    if bho and orc:
+        da = bho["attainment"] - orc["attainment"]
+        if da > attain_tol:
+            problems.append(
+                f"oracle: held-out attainment dropped "
+                f"{bho['attainment']:.4f} -> {orc['attainment']:.4f} "
+                f"(tol {attain_tol})")
+        floor = max(bho["cost_usd_hr"], 1e-9)
+        if orc["cost_usd_hr"] > floor * (1.0 + cost_tol):
+            problems.append(
+                f"oracle: held-out $/hr rose {bho['cost_usd_hr']:.2f} -> "
+                f"{orc['cost_usd_hr']:.2f} (tol {cost_tol * 100:.0f}%)")
+    return problems
+
+
+def _oracle_closed_loop_problems(fresh: dict) -> list:
+    """The oracle-vs-retune drift-recovery bars: never later, and when
+    swapping at the same segment boundary, not meaningfully costlier."""
+    cl = fresh.get("closed_loop", {})
+    orc, rt = cl.get("oracle"), cl.get("retune")
+    bar = cl.get("attainment_bar")
+    if not orc or not rt or bar is None:
+        return [f"oracle: closed_loop section incomplete (have "
+                f"{sorted(cl)})"]
+    problems = []
+    if not orc.get("hits", 0) >= 1:
+        problems.append(
+            "oracle: the controller's drift consultation never hit — the "
+            f"closed loop fell back to re-tune ({orc.get('misses', 0)} "
+            "miss(es))")
+    ob, rb = orc.get("swap_bin"), rt.get("swap_bin")
+    if ob is None or rb is None:
+        problems.append(
+            f"oracle: a closed-loop arm never swapped (oracle bin {ob}, "
+            f"retune bin {rb})")
+    else:
+        if ob > rb:
+            problems.append(
+                f"oracle: oracle-assisted recovery swapped LATER than warm "
+                f"re-tune (bin {ob} vs {rb})")
+        if (ob == rb and orc["post_drift_usd_per_hour"]
+                > rt["post_drift_usd_per_hour"]
+                * (1.0 + ORACLE_CL_COST_TOL)):
+            problems.append(
+                f"oracle: same-segment recovery costs more than re-tune "
+                f"(${orc['post_drift_usd_per_hour']:.2f}/hr vs "
+                f"${rt['post_drift_usd_per_hour']:.2f}/hr, tol "
+                f"{ORACLE_CL_COST_TOL * 100:.0f}%)")
+    if orc.get("recovery_attainment", 0.0) < bar:
+        problems.append(
+            f"oracle: oracle-assisted recovery misses the bar "
+            f"({orc.get('recovery_attainment'):.4f} < {bar})")
+    osims, rsims = orc.get("consult_sims"), rt.get("tune_sims")
+    if osims is None or rsims is None or not osims < rsims:
+        problems.append(
+            f"oracle: consultation no longer cheaper than re-tune "
+            f"({osims} vs {rsims} candidate-replicates)")
+    return problems
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="fail when benchmark results regress vs baseline")
@@ -535,6 +703,36 @@ def main(argv=None) -> int:
               f"{cl.get('detection_delay_bins')} bins at "
               f"${head['closed_loop_usd_per_hour']:.2f}/hr vs static "
               f"${head['static_usd_per_hour']:.2f}/hr; {agree_note}")
+        return 0
+
+    if fresh.get("benchmark") == "scoping_oracle":
+        problems = compare_oracle(fresh, base, args.attain_tol,
+                                  args.cost_tol)
+        if problems:
+            print(f"BENCH REGRESSION ({len(problems)} problem(s)):")
+            for p in problems:
+                print(f"  - {p}")
+            return 1
+        lat = fresh.get("latency", {})
+        ho = fresh.get("heldout", {})
+        cl = fresh.get("closed_loop", {})
+        agree = fresh.get("agreement", {})
+        agree_note = (f"agreement skipped ({agree['error']})"
+                      if agree.get("error") else
+                      f"backends agree (score delta "
+                      f"{agree.get('max_score_delta'):.2e})")
+        print(f"oracle gate green: {lat.get('median_us', 0):.0f}us median "
+              f"query (bar {ORACLE_MAX_MEDIAN_LATENCY_US:.0f}us), held-out "
+              f"regret {ho.get('regret', 0) * 100:.1f}% vs fresh tune "
+              f"(bar {ORACLE_MAX_REGRET * 100:.0f}%), build "
+              f"{fresh.get('build', {}).get('tune_equivalents', 0):.1f} "
+              f"tune-equivalents for "
+              f"{fresh.get('build', {}).get('n_cells')} cells; drift "
+              f"recovery: oracle swap at bin "
+              f"{cl.get('oracle', {}).get('swap_bin')} vs re-tune "
+              f"{cl.get('retune', {}).get('swap_bin')} with "
+              f"{cl.get('oracle', {}).get('consult_sims')} vs "
+              f"{cl.get('retune', {}).get('tune_sims')} sims; {agree_note}")
         return 0
 
     if fresh.get("benchmark") == "controller_tuning":
