@@ -48,9 +48,10 @@ from repro.fleet.tuning import (CandidateEval, Categorical, Continuous,
                                 Integer, Objective, ParamSpace, RaceResult,
                                 TuningBudget, TuningReport, TuningScenario,
                                 discipline_dim, evaluate_candidates,
-                                exhaustive, pareto_frontier, quota_dims,
-                                race, tune, tuning_scenario,
-                                warm_start_candidates)
+                                evaluate_candidates_column, exhaustive,
+                                pareto_frontier, quota_dims, race,
+                                race_column, robust_m, robust_weights, tune,
+                                tuning_scenario, warm_start_candidates)
 from repro.fleet.workload import (RequestClass, ServiceModel, Workload,
                                   service_model_from_cell)
 
@@ -79,8 +80,9 @@ __all__ = [
     "service_model_from_cell", "CandidateEval", "Categorical", "Continuous",
     "Integer", "Objective", "ParamSpace", "RaceResult", "TuningBudget",
     "TuningReport", "TuningScenario", "discipline_dim",
-    "evaluate_candidates", "exhaustive", "pareto_frontier", "quota_dims",
-    "race", "tune", "tuning_scenario", "telemetry",
+    "evaluate_candidates", "evaluate_candidates_column", "exhaustive",
+    "pareto_frontier", "quota_dims", "race", "race_column", "robust_m",
+    "robust_weights", "tune", "tuning_scenario", "telemetry",
     "OracleAnswer", "OracleCell", "OracleGrid", "OracleTable",
     "ScopingOracle", "TraceFeatures", "VerificationReport", "build_oracle",
     "canonical_trace", "featurize", "query_latency_us", "verify_oracle",

@@ -29,6 +29,7 @@ compiled programs instead of recompiling per round.
 """
 from __future__ import annotations
 
+import os
 import time
 
 import numpy as np
@@ -56,6 +57,106 @@ _CORE_CACHE: dict = {}
 # a first dispatch pays XLA compilation (cold), repeats are pure dispatch
 # (warm) — the classifier behind the compile-vs-dispatch timing split.
 _DISPATCHED: set = set()
+
+# Persistent (on-disk) XLA compilation cache bookkeeping: disk hit/miss
+# tallies fed by jax's monitoring events, and the wired cache directory.
+_PCACHE = {"hits": 0, "misses": 0, "dir": None, "listener": False}
+
+_PCACHE_EVENTS = {"/jax/compilation_cache/cache_hits": "hit",
+                  "/jax/compilation_cache/cache_misses": "miss"}
+
+
+def _pcache_event(event: str, **kw) -> None:
+    result = _PCACHE_EVENTS.get(event)
+    if result is None:
+        return
+    _PCACHE["hits" if result == "hit" else "misses"] += 1
+    telemetry.counter("jaxsim_compile_cache_disk_total", result=result)
+
+
+def enable_persistent_compile_cache(path: str) -> None:
+    """Wire JAX's on-disk compilation cache through the compiled backend, so
+    repeated tuner rounds, oracle builds and CI runs stop re-paying XLA
+    compilation across *processes*: a cold dispatch whose program was
+    compiled by any earlier run deserializes the executable from ``path``
+    instead of recompiling. The size/compile-time admission floors are
+    dropped (every program persists — fleet cores are small but each costs
+    seconds of XLA time), and a monitoring listener feeds disk hit/miss
+    tallies to ``persistent_cache_stats()`` plus the
+    ``jaxsim_compile_cache_disk_total`` telemetry counter (a no-op unless a
+    telemetry session is active, so the wiring stays bit-exact)."""
+    import jax
+    for opt, val in (("jax_compilation_cache_dir", str(path)),
+                     ("jax_persistent_cache_min_entry_size_bytes", -1),
+                     ("jax_persistent_cache_min_compile_time_secs", 0.0)):
+        try:
+            jax.config.update(opt, val)
+        except Exception:   # older jax without the admission knobs
+            pass
+    if not _PCACHE["listener"]:
+        try:
+            jax.monitoring.register_event_listener(_pcache_event)
+            _PCACHE["listener"] = True
+        except Exception:
+            pass
+    # jax latches "cache in use?" per process at the FIRST compilation
+    # (compilation_cache._cache_checked); enabling after any jit has run
+    # would silently do nothing without a reset back to pristine state.
+    try:
+        from jax._src.compilation_cache import reset_cache
+        reset_cache()
+    except Exception:
+        pass
+    _PCACHE["dir"] = str(path)
+
+
+def disable_persistent_compile_cache() -> None:
+    """Unwire the on-disk compilation cache and restore jax's stock admission
+    floors, returning the process to its pristine no-cache state. Tests that
+    enable the cache against a temporary directory must call this afterwards:
+    the cache config is process-global, and leaving every later jit in the
+    process serializing through a (possibly reaped) tmp dir is both slow and
+    unsafe. Hit/miss tallies are preserved — they are per-process history."""
+    import jax
+    for opt, val in (("jax_compilation_cache_dir", None),
+                     ("jax_persistent_cache_min_entry_size_bytes", 0),
+                     ("jax_persistent_cache_min_compile_time_secs", 1.0)):
+        try:
+            jax.config.update(opt, val)
+        except Exception:
+            pass
+    try:
+        from jax._src.compilation_cache import reset_cache
+        reset_cache()
+    except Exception:
+        pass
+    _PCACHE["dir"] = None
+
+
+def persistent_cache_stats() -> dict:
+    """Disk-cache tallies since process start: ``{hits, misses, dir}``
+    (``dir`` is None until a cache is wired)."""
+    return {"hits": int(_PCACHE["hits"]), "misses": int(_PCACHE["misses"]),
+            "dir": _PCACHE["dir"]}
+
+
+def clear_compiled() -> list:
+    """Evict every compiled core and jit executable (``jax.clear_caches``),
+    so the next dispatch recompiles — through the persistent on-disk cache
+    when one is wired, which is how a warm-cache rebuild is measured.
+    Returns the evicted core callables: a caller timing a cold rebuild must
+    hold these references until it is done, otherwise a newly built core can
+    reuse a freed core's ``id()`` and masquerade as already-dispatched in
+    the cold/warm classifier."""
+    evicted = list(_CORE_CACHE.values())
+    _CORE_CACHE.clear()
+    _DISPATCHED.clear()
+    try:
+        import jax
+        jax.clear_caches()
+    except Exception:
+        pass
+    return evicted
 
 
 def _build_core(kernel, *, T, C, P, Tpad, W, dt, order, t_fixed, t_unit,
@@ -489,7 +590,8 @@ def _pad_pow2(n: int) -> int:
 def run_dynamics(kernel, *, arrivals, jb, dt, order, t_fixed, t_unit, max_b,
                  max_queue, tables, kp, min_rep, max_rep, init_ready,
                  max_cold_bins, tput=(), n_substeps: int = 1,
-                 preemptive: bool = False) -> dict:
+                 preemptive: bool = False, tile: int = None,
+                 _pad_to: int = None, _tile_idx: tuple = None) -> dict:
     """Run the compiled dynamics for a stacked batch of candidates against a
     shared seed batch; one jitted dispatch covers the whole lattice.
 
@@ -500,15 +602,54 @@ def run_dynamics(kernel, *, arrivals, jb, dt, order, t_fixed, t_unit, max_b,
     arrays with leading dims (N, S, T). Candidate batches are padded to the
     next power of two (padding replays candidate 0) so racing's shrinking
     rounds hit a handful of compiled programs.
+
+    ``tile`` streams candidate slates wider than the (pow2-rounded) tile
+    through fixed-shape chunks: every chunk — the tail included — pads to
+    the full tile width, so the whole stream shares ONE compiled program
+    and every dispatch after the first is warm. That is what bounds device
+    memory and compile count when a racing round carries thousands of LHS
+    candidates. Results are bit-identical to the untiled dispatch (padding
+    rows are discarded per chunk).
     """
     import jax
     from jax.experimental import enable_x64
+
+    if _PCACHE["dir"] is None and os.environ.get("JAX_COMPILATION_CACHE_DIR"):
+        # env-wired persistent cache (e.g. CI's actions/cache dir): jax reads
+        # the env var itself, but the admission floors and the hit/miss
+        # listener only attach through our wiring
+        enable_persistent_compile_cache(
+            os.environ["JAX_COMPILATION_CACHE_DIR"])
 
     arrivals = np.asarray(arrivals, np.float64)
     S, T, C = arrivals.shape
     P = len(order)
     N = len(min_rep)
-    Npad = _pad_pow2(N)
+    if tile is not None:
+        tile_w = _pad_pow2(int(tile))
+        if N > tile_w:
+            n_tiles = int(np.ceil(N / tile_w))
+            kp = {k: np.asarray(v) for k, v in kp.items()}
+            min_rep, max_rep, init_ready = (np.asarray(min_rep),
+                                            np.asarray(max_rep),
+                                            np.asarray(init_ready))
+            outs = []
+            for i in range(n_tiles):
+                sl = slice(i * tile_w, min((i + 1) * tile_w, N))
+                outs.append(run_dynamics(
+                    kernel, arrivals=arrivals, jb=jb, dt=dt, order=order,
+                    t_fixed=t_fixed, t_unit=t_unit, max_b=max_b,
+                    max_queue=max_queue,
+                    tables={k: v[sl] for k, v in tables.items()},
+                    kp={k: v[sl] for k, v in kp.items()},
+                    min_rep=min_rep[sl], max_rep=max_rep[sl],
+                    init_ready=init_ready[sl], max_cold_bins=max_cold_bins,
+                    tput=tput, n_substeps=n_substeps, preemptive=preemptive,
+                    _pad_to=tile_w, _tile_idx=(i, n_tiles)))
+            telemetry.counter("jaxsim_tiles_total", n_tiles)
+            return {k: np.concatenate([o[k] for o in outs], axis=0)
+                    for k in outs[0]}
+    Npad = _pad_pow2(N) if _pad_to is None else int(_pad_to)
 
     def pad(a):
         a = np.asarray(a)
@@ -536,10 +677,12 @@ def run_dynamics(kernel, *, arrivals, jb, dt, order, t_fixed, t_unit, max_b,
     # the tuner timing breakdown report as compile-vs-dispatch seconds
     sig = (id(core), Npad, S, T, C, P)
     cold = sig not in _DISPATCHED
+    attrs = dict(kind="cold" if cold else "warm",
+                 candidates=N, padded=Npad, seeds=S, bins=T)
+    if _tile_idx is not None:
+        attrs.update(tile=_tile_idx[0], n_tiles=_tile_idx[1])
     t0 = time.perf_counter()
-    with telemetry.span("jaxsim.dispatch",
-                        kind="cold" if cold else "warm",
-                        candidates=N, padded=Npad, seeds=S, bins=T):
+    with telemetry.span("jaxsim.dispatch", **attrs):
         with enable_x64():
             out = core(arrivals, rate, rate_sum, np.asarray(jb, np.int32),
                        pad(tables["cnt"]), pad(tables["cls_of_rank"]),

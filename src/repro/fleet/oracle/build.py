@@ -263,59 +263,142 @@ def _frontier_entries(report) -> tuple:
                   "score": e.mean_score()} for e in report.frontier)
 
 
+def _tune_column(scen0, candidates, space, objective, budget, slos):
+    """Tune every SLO tier of one (rate, burstiness) column against the
+    shared candidate slate with SHARED compiled dispatches
+    (``race_column``): single-class tiers have bin-exact identical dynamics
+    — the SLO only enters the host-side exact-latency accounting — so the
+    column's K tiers cost one tier's simulations instead of K. Per-tier
+    racing bookkeeping (SPRT, halving, full-budget winner evidence) is
+    ``race``'s own, so each tier's winner, frontier and fitted surface are
+    identical to a standalone per-cell ``tune()``. Returns
+    ``(reports, sims_shared)`` aligned with ``slos``, or ``None`` when the
+    slate cannot batch (caller tunes cells separately)."""
+    from repro.fleet.tuning.racing import race_column
+    from repro.fleet.tuning.result import TuningReport, pareto_frontier
+    from repro.fleet.tuning.tuner import _fit_surface
+
+    got = race_column(scen0, candidates, objective, slos,
+                      init_seeds=budget.init_seeds, eta=budget.eta,
+                      alpha=budget.alpha, beta=budget.beta)
+    if got is None:
+        return None
+    results, sims_shared = got
+    reports = []
+    for rr in results:
+        surface, names = _fit_surface(space, rr.evals)
+        reports.append(TuningReport(
+            scenario_name=scen0.name,
+            policy_family=getattr(scen0.policy_cls, "name",
+                                  scen0.policy_cls.__name__),
+            objective=objective, winner=rr.winner,
+            frontier=pareto_frontier(rr.evals), surface=surface,
+            surface_names=names, sims_used=rr.sims_used,
+            full_budget=rr.full_budget, evals=rr.evals, space=space,
+            _scenario=scen0, spans=None))
+    return reports, sims_shared
+
+
 def build_oracle(grid: OracleGrid, fleet, policy_cls, space: ParamSpace, *,
                  objective: Objective = None, budget: TuningBudget = None,
                  context: dict = None, discipline: str = "fifo",
                  max_queue: float = None, backend: str = "auto",
-                 name: str = "oracle") -> OracleTable:
+                 name: str = "oracle", column_batch: bool = True
+                 ) -> OracleTable:
     """Sweep ``tune()`` over every grid cell and compile the answers.
 
     Per cell: synthesize the canonical trace for (mean_rate, burstiness),
     wrap it into a single-class workload at the cell's SLO, tune
     ``policy_cls`` over ``space`` with the column-derived seed, and record
-    the winner + Pareto frontier. Deterministic under (grid, budget, seed);
-    the sweep is a pure fan-out (cells in a column share nothing but the
-    candidate set), which is what makes it embarrassingly parallel on the
-    compiled backend — each cell's racing round is already one jitted
-    candidate x seed dispatch.
+    the winner + Pareto frontier. Deterministic under (grid, budget, seed).
+
+    With ``column_batch`` (the default) and a compiled backend, every SLO
+    tier in a (rate, burstiness) column rides the SAME dispatches: tiers
+    already race a shared candidate set on shared arrivals (the
+    SLO-monotonicity invariant), and a single-class workload's dynamics
+    never see the SLO, so one compiled racing round scores the whole column
+    and each tier re-assembles its own accounting on the host
+    (``race_column``). Winners and frontiers are identical to the per-cell
+    sweep; ``build_info["sims_used"]`` counts the trajectories actually
+    simulated, so the build's amortization (``tune_equivalents``) honestly
+    drops by ~the column height. Cells fall back to per-cell ``tune()``
+    when the slate cannot batch (numpy backend, custom families,
+    exhaustive budgets).
     """
     objective = objective or Objective()
     budget = budget or TuningBudget(n_candidates=12, init_seeds=2)
     context = dict(context or {})
     fleet_label = "+".join(p.label for p in fleet.pools)
     cells, sims_total = {}, 0
+    n_slos = len(grid.slos)
     with telemetry.span("oracle.build", n_cells=grid.n_cells,
-                        backend=backend):
-        for idx, mr, burst, slo in grid.cells():
-            # Trace and tuner seeds depend only on the (rate, burstiness)
-            # column, never on the SLO index: every SLO tier in a column
-            # must race the same candidate set on the same arrivals for
-            # the interpolated score to stay monotone in SLO tightness.
-            col_seed = grid.seed + 7919 * (1 + idx[0] * 31 + idx[1])
-            tr = canonical_trace(
-                mr, burst, duration_s=grid.duration_s, dt_s=grid.dt_s,
-                n_seeds=grid.n_seeds, seed=col_seed,
-                burst_width_frac=grid.burst_width_frac)
-            wl = Workload.from_trace(tr, slo)
-            scen = TuningScenario(
-                name=f"{name}/cell{idx}", workload=wl, fleet=fleet,
-                policy_cls=policy_cls, context=dict(context, slo_s=slo),
-                discipline=discipline, max_queue=max_queue, backend=backend)
-            with telemetry.span("oracle.cell", idx=str(idx), rate=mr,
-                                burstiness=burst, slo=slo):
-                report = tune(scen, space, objective, budget, seed=col_seed)
-            sims_total += report.sims_used
-            cells[idx] = OracleCell(
-                idx=idx, mean_rate=mr, burstiness=burst, slo_s=slo,
-                features=featurize(tr), winner=dict(report.winner.params),
-                cost_usd_hr=report.winner.mean_cost(),
-                attainment=report.winner.mean_attainment(),
-                score=report.winner.mean_score(),
-                frontier=_frontier_entries(report))
-            _LOG.info("oracle cell %s: rate %.3g/s burst %.2f slo %.3gs -> "
-                      "%s ($%.2f/hr @ %.4f)", idx, mr, burst, slo,
-                      cells[idx].winner, cells[idx].cost_usd_hr,
-                      cells[idx].attainment)
+                        backend=backend, column_batch=column_batch):
+        for i, mr in enumerate(grid.mean_rates):
+            for j, burst in enumerate(grid.burstiness):
+                # Trace and tuner seeds depend only on the (rate,
+                # burstiness) column, never on the SLO index: every SLO
+                # tier in a column must race the same candidate set on the
+                # same arrivals for the interpolated score to stay monotone
+                # in SLO tightness.
+                col_seed = grid.seed + 7919 * (1 + i * 31 + j)
+                tr = canonical_trace(
+                    mr, burst, duration_s=grid.duration_s, dt_s=grid.dt_s,
+                    n_seeds=grid.n_seeds, seed=col_seed,
+                    burst_width_frac=grid.burst_width_frac)
+                reports = None
+                if column_batch and backend != "numpy" and budget.racing \
+                        and n_slos > 1:
+                    scen0 = TuningScenario(
+                        name=f"{name}/col({i},{j})",
+                        workload=Workload.from_trace(tr, grid.slos[0]),
+                        fleet=fleet, policy_cls=policy_cls,
+                        context=dict(context, slo_s=grid.slos[0]),
+                        discipline=discipline, max_queue=max_queue,
+                        backend=backend)
+                    if budget.sampler == "grid":
+                        candidates = space.grid(budget.grid_levels)
+                    else:
+                        candidates = space.sample_lhs(budget.n_candidates,
+                                                      seed=col_seed)
+                    with telemetry.span("oracle.column", col=f"({i},{j})",
+                                        rate=mr, burstiness=burst,
+                                        tiers=n_slos):
+                        got = _tune_column(scen0, candidates, space,
+                                           objective, budget, grid.slos)
+                    if got is not None:
+                        reports, sims_shared = got
+                        sims_total += sims_shared
+                for k, slo in enumerate(grid.slos):
+                    idx = (i, j, k)
+                    if reports is not None:
+                        report = reports[k]
+                    else:
+                        wl = Workload.from_trace(tr, slo)
+                        scen = TuningScenario(
+                            name=f"{name}/cell{idx}", workload=wl,
+                            fleet=fleet, policy_cls=policy_cls,
+                            context=dict(context, slo_s=slo),
+                            discipline=discipline, max_queue=max_queue,
+                            backend=backend)
+                        with telemetry.span("oracle.cell", idx=str(idx),
+                                            rate=mr, burstiness=burst,
+                                            slo=slo):
+                            report = tune(scen, space, objective, budget,
+                                          seed=col_seed)
+                        sims_total += report.sims_used
+                    cells[idx] = OracleCell(
+                        idx=idx, mean_rate=mr, burstiness=burst, slo_s=slo,
+                        features=featurize(tr),
+                        winner=dict(report.winner.params),
+                        cost_usd_hr=report.winner.mean_cost(),
+                        attainment=report.winner.mean_attainment(),
+                        score=report.winner.mean_score(),
+                        frontier=_frontier_entries(report))
+                    _LOG.info(
+                        "oracle cell %s: rate %.3g/s burst %.2f slo %.3gs "
+                        "-> %s ($%.2f/hr @ %.4f)", idx, mr, burst, slo,
+                        cells[idx].winner, cells[idx].cost_usd_hr,
+                        cells[idx].attainment)
     per_cell = max(budget.n_candidates * grid.n_seeds, 1)
     table = OracleTable(
         grid=grid, space=space, objective=objective,

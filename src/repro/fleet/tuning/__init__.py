@@ -6,8 +6,11 @@
 # SPRT racing (`racing`), and the response-surface/Pareto report (`result`).
 from repro.fleet.tuning.evaluate import (CandidateEval, Objective,
                                          TuningScenario, evaluate_candidates,
-                                         per_seed_metrics)
-from repro.fleet.tuning.racing import RaceResult, exhaustive, race
+                                         evaluate_candidates_column,
+                                         per_seed_metrics, robust_m,
+                                         robust_weights)
+from repro.fleet.tuning.racing import (RaceResult, exhaustive, race,
+                                       race_column)
 from repro.fleet.tuning.result import (TuningReport, frontier_table,
                                        pareto_frontier)
 from repro.fleet.tuning.space import (Categorical, Continuous, Dim, Integer,
@@ -17,8 +20,10 @@ from repro.fleet.tuning.tuner import (TuningBudget, tune, tuning_scenario,
 
 __all__ = [
     "CandidateEval", "Objective", "TuningScenario", "evaluate_candidates",
-    "per_seed_metrics", "RaceResult", "exhaustive", "race", "TuningReport",
-    "frontier_table", "pareto_frontier", "Categorical", "Continuous", "Dim",
-    "Integer", "ParamSpace", "discipline_dim", "quota_dims", "TuningBudget",
-    "tune", "tuning_scenario", "warm_start_candidates",
+    "evaluate_candidates_column", "per_seed_metrics", "robust_m",
+    "robust_weights", "RaceResult", "exhaustive", "race", "race_column",
+    "TuningReport", "frontier_table", "pareto_frontier", "Categorical",
+    "Continuous", "Dim", "Integer", "ParamSpace", "discipline_dim",
+    "quota_dims", "TuningBudget", "tune", "tuning_scenario",
+    "warm_start_candidates",
 ]

@@ -31,7 +31,9 @@ import numpy as np
 
 from repro.fleet import telemetry
 from repro.fleet.tuning.evaluate import (CandidateEval, Objective,
-                                         TuningScenario, evaluate_candidates)
+                                         TuningScenario,
+                                         evaluate_candidates,
+                                         evaluate_candidates_column)
 
 _EPS = 1e-12
 
@@ -41,8 +43,8 @@ class RaceResult:
     evals: list                      # CandidateEval per candidate (all)
     winner: CandidateEval
     survivors: list                  # full-budget finalists (CandidateEval)
-    sims_used: int                   # candidate x seed simulations spent
-    full_budget: int                 # n_candidates x n_seeds (the naive sweep)
+    sims_used: int                   # candidate x seed x trace sims spent
+    full_budget: int                 # n_candidates x n_seeds x n_traces
     culled_at_round: dict = field(default_factory=dict)  # cand idx -> round
 
     @property
@@ -76,9 +78,14 @@ def race(scenario: TuningScenario, candidates: list, objective: Objective,
          beta: float = 0.05, min_survivors: int = 2) -> RaceResult:
     """Race ``candidates`` to the scenario's full replicate budget, culling
     dominated configs early. Returns every candidate's evidence (culled ones
-    keep the seeds they saw), the full-budget survivors, and the spend."""
+    keep the seeds they saw), the full-budget survivors, and the spend. On a
+    portfolio scenario racing operates on the robust per-seed score and each
+    replicate costs ``n_traces`` simulations (all ridden by the same
+    dispatch), so ``sims_used``/``full_budget`` count
+    candidate x seed x trace trajectories."""
     n_seeds = scenario.n_seeds
     n = len(candidates)
+    K = scenario.n_traces
     if n == 0:
         raise ValueError("race needs at least one candidate")
     init_seeds = int(np.clip(init_seeds, 1, n_seeds))
@@ -95,7 +102,7 @@ def race(scenario: TuningScenario, candidates: list, objective: Objective,
             fresh = evaluate_candidates(
                 scenario, [candidates[i] for i in alive], objective,
                 s0=s_done, s1=s_next)
-        sims += len(alive) * (s_next - s_done)
+        sims += len(alive) * (s_next - s_done) * K
         for i, ev in zip(alive, fresh):
             if evals[i] is None:
                 evals[i] = ev
@@ -135,7 +142,7 @@ def race(scenario: TuningScenario, candidates: list, objective: Objective,
                 fresh = evaluate_candidates(
                     scenario, [candidates[alive[0]]], objective,
                     s0=s_done, s1=n_seeds)
-            sims += n_seeds - s_done
+            sims += (n_seeds - s_done) * K
             evals[alive[0]].extend(fresh[0])
             evals[alive[0]].n_rounds = rnd + 1
             s_done = n_seeds
@@ -144,15 +151,111 @@ def race(scenario: TuningScenario, candidates: list, objective: Objective,
     winner = min(survivors, key=lambda e: e.mean_score())
     return RaceResult(evals=[e for e in evals if e is not None],
                       winner=winner, survivors=survivors, sims_used=sims,
-                      full_budget=n * n_seeds, culled_at_round=culled_at)
+                      full_budget=n * n_seeds * K, culled_at_round=culled_at)
 
 
 def exhaustive(scenario: TuningScenario, candidates: list,
                objective: Objective) -> RaceResult:
-    """The naive full-budget sweep: every candidate on every replicate.
-    The reference racing is measured against."""
+    """The naive full-budget sweep: every candidate on every replicate (and,
+    on a portfolio, every trace). The reference racing is measured against."""
     evals = evaluate_candidates(scenario, candidates, objective)
     winner = min(evals, key=lambda e: e.mean_score())
-    full = len(candidates) * scenario.n_seeds
+    full = len(candidates) * scenario.n_seeds * scenario.n_traces
     return RaceResult(evals=evals, winner=winner, survivors=list(evals),
                       sims_used=full, full_budget=full)
+
+
+def race_column(scenario: TuningScenario, candidates: list,
+                objective: Objective, slo_values, *, init_seeds: int = 2,
+                eta: int = 2, alpha: float = 0.05, beta: float = 0.05,
+                min_survivors: int = 2):
+    """Race one shared candidate slate for a whole column of SLO tiers,
+    every round ONE compiled dispatch over the union of tier-alive
+    candidates (``evaluate_candidates_column``: single-class tiers share
+    bin-exact dynamics, only the host-side SLO accounting differs).
+
+    Each tier runs ``race``'s exact bookkeeping — same rung schedule, SPRT
+    cull, halving cap and full-budget winner evidence — against its own SLO
+    bar, so per-tier winners, survivors and per-tier ``sims_used`` are
+    identical to racing each tier separately; what changes is the physical
+    spend: a candidate alive in several tiers simulates once per round, not
+    once per tier. Returns ``(results, sims_shared)`` — per-tier
+    ``RaceResult``s aligned with ``slo_values`` plus the actual shared
+    trajectory count — or ``None`` when the slate cannot batch (caller
+    races tiers separately)."""
+    n_seeds = scenario.n_seeds
+    n = len(candidates)
+    K = scenario.n_traces
+    if n == 0:
+        raise ValueError("race needs at least one candidate")
+    n_tiers = len(slo_values)
+    init_seeds = int(np.clip(init_seeds, 1, n_seeds))
+    evals = [[None] * n for _ in range(n_tiers)]
+    alive = [list(range(n)) for _ in range(n_tiers)]
+    culled_at = [{} for _ in range(n_tiers)]
+    tier_sims = [0] * n_tiers
+    sims_shared = 0
+    s_done = 0
+    rnd = 0
+    while s_done < n_seeds:
+        s_next = min(max(s_done * eta, init_seeds), n_seeds)
+        union = sorted(set().union(*map(set, alive)))
+        with telemetry.span("tune.race.round", round=rnd, alive=len(union),
+                            s0=s_done, s1=s_next, tiers=n_tiers):
+            tiered = evaluate_candidates_column(
+                scenario, [candidates[i] for i in union], objective,
+                slo_values, s0=s_done, s1=s_next)
+        if tiered is None:
+            return None
+        sims_shared += len(union) * (s_next - s_done) * K
+        pos = {i: j for j, i in enumerate(union)}
+        for ti in range(n_tiers):
+            ev_t, alive_t = evals[ti], alive[ti]
+            tier_sims[ti] += len(alive_t) * (s_next - s_done) * K
+            for i in alive_t:
+                ev = tiered[ti][pos[i]]
+                if ev_t[i] is None:
+                    ev_t[i] = ev
+                else:
+                    ev_t[i].extend(ev)
+                ev_t[i].n_rounds = rnd + 1
+        s_done = s_next
+
+        for ti in range(n_tiers):
+            ev_t, alive_t = evals[ti], alive[ti]
+            if len(alive_t) <= 1:
+                continue
+            with telemetry.span("tune.race.cull", round=rnd, tier=ti):
+                by_score = sorted(alive_t,
+                                  key=lambda i: ev_t[i].mean_score())
+                inc = ev_t[by_score[0]]
+                keep = [by_score[0]]
+                for i in by_score[1:]:
+                    if _sprt_cull(ev_t[i].score - inc.score, alpha, beta):
+                        culled_at[ti][i] = rnd
+                        telemetry.counter("tuning_culled_total",
+                                          reason="sprt")
+                    else:
+                        keep.append(i)
+                cap = max(int(np.ceil(len(alive_t) / eta)), min_survivors)
+                if s_done < n_seeds and len(keep) > cap:
+                    for i in keep[cap:]:
+                        culled_at[ti][i] = rnd
+                        telemetry.counter("tuning_culled_total",
+                                          reason="halving")
+                    keep = keep[:cap]
+            alive[ti] = keep
+        rnd += 1
+        # a tier's lone survivor keeps riding the shared rounds to the full
+        # replicate budget (adjacent slices concatenate to exactly the
+        # one-shot evidence ``race``'s fast path collects)
+
+    results = []
+    for ti in range(n_tiers):
+        survivors = [evals[ti][i] for i in alive[ti]]
+        winner = min(survivors, key=lambda e: e.mean_score())
+        results.append(RaceResult(
+            evals=[e for e in evals[ti] if e is not None], winner=winner,
+            survivors=survivors, sims_used=tier_sims[ti],
+            full_budget=n * n_seeds * K, culled_at_round=culled_at[ti]))
+    return results, sims_shared

@@ -69,6 +69,8 @@ class TuningReport:
     evals: list = field(default_factory=list, repr=False)
     space: object = None
     spans: object = None             # telemetry Span tree (None when off)
+    robust: Optional[str] = None     # portfolio reduction ("worst_case", ...)
+    n_traces: int = 1                # portfolio size candidates were scored on
     _scenario: object = field(default=None, repr=False)
 
     @property
@@ -133,8 +135,14 @@ class TuningReport:
                       f"worst-class SLO "
                       f"{self.baseline.mean_attainment() * 100:.2f}% "
                       f"— tuned {verdict} the hand-set default"]
+        if self.n_traces > 1:
+            lines += [f"portfolio: {self.n_traces} traces reduced by "
+                      f"{self.robust or 'worst_case'}; winner's worst-trace "
+                      f"score ${self.winner.worst_trace_score():.2f}, "
+                      f"worst-trace attainment "
+                      f"{self.winner.worst_trace_attainment() * 100:.2f}%"]
         lines += ["", f"simulation budget: {self.sims_used} of "
-                  f"{self.full_budget} candidate-replicates "
+                  f"{self.full_budget} candidate-seed-trace sims "
                   f"({self.budget_frac * 100:.0f}% of the naive sweep)"]
         if self.surface is not None:
             lines += [f"response surface over "
@@ -191,6 +199,8 @@ class TuningReport:
             "surface_names": list(self.surface_names),
             "sims_used": int(self.sims_used),
             "full_budget": int(self.full_budget),
+            "robust": self.robust,
+            "n_traces": int(self.n_traces),
             "space": None if self.space is None else self.space.to_json(),
         }
         if include_evals:
@@ -230,6 +240,8 @@ class TuningReport:
             evals=[CandidateEval.from_json(e) for e in d.get("evals", [])],
             space=(None if d.get("space") is None
                    else ParamSpace.from_json(d["space"])),
+            robust=d.get("robust"),
+            n_traces=int(d.get("n_traces", 1)),
             spans=(None if d.get("spans") is None
                    else _span_from_json(d["spans"])))
 

@@ -49,7 +49,8 @@ def tuning_scenario(scenario, workload, policy_cls, *, shape_name: str = None,
                     fleet: FleetConfig = None, cold_start_s=60.0,
                     max_queue: float = None, discipline: str = "fifo",
                     cold_start_seed: int = 0, name: str = None,
-                    backend: str = "auto") -> TuningScenario:
+                    backend: str = "auto", robust: str = "worst_case",
+                    tile: int = 256) -> TuningScenario:
     """Build a ``TuningScenario`` from a fleet ``Scenario`` (scoping rows).
 
     Single-pool by default: the pool's shape is ``shape_name`` or the
@@ -60,7 +61,10 @@ def tuning_scenario(scenario, workload, policy_cls, *, shape_name: str = None,
     ``quota:*`` dims). ``backend`` picks the simulator implementation
     candidates are scored on ("numpy" reference loop, "jax" compiled
     batched, or the default "auto": compiled when the family has a kernel,
-    numpy otherwise).
+    numpy otherwise). ``workload`` may be a sequence of Workloads/Traces —
+    a portfolio whose per-trace scores reduce via ``robust`` (see
+    ``TuningScenario``); ``tile`` bounds the compiled backend's per-dispatch
+    candidate width.
     """
     if fleet is None:
         if shape_name is None:
@@ -76,11 +80,18 @@ def tuning_scenario(scenario, workload, policy_cls, *, shape_name: str = None,
     context = {"rows": rows, "constraint": scenario.constraint(),
                "units_per_step": scenario.units_per_step,
                "slo_s": scenario.slo_s}
+    if name is None:
+        if isinstance(workload, (list, tuple)):
+            name = (f"{scenario.name}/portfolio"
+                    f"[{','.join(getattr(w, 'name', 'trace') for w in workload)}]")
+        else:
+            name = f"{scenario.name}/{getattr(workload, 'name', 'trace')}"
     return TuningScenario(
-        name=name or f"{scenario.name}/{getattr(workload, 'name', 'trace')}",
+        name=name,
         workload=workload, fleet=fleet, policy_cls=policy_cls,
         context=context, discipline=discipline, max_queue=max_queue,
-        cold_start_seed=cold_start_seed, backend=backend)
+        cold_start_seed=cold_start_seed, backend=backend, robust=robust,
+        tile=tile)
 
 
 def _fit_surface(space, evals, min_rounds: int = 2):
@@ -224,4 +235,6 @@ def tune(scenario: TuningScenario, space, objective: Objective = None,
         surface=surface, surface_names=names,
         sims_used=rr.sims_used, full_budget=rr.full_budget,
         baseline=base_eval, evals=rr.evals, space=space,
+        robust=scenario.robust if scenario.n_traces > 1 else None,
+        n_traces=scenario.n_traces,
         _scenario=scenario, spans=root)

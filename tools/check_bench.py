@@ -24,6 +24,10 @@ Tuner gate (``benchmark == "controller_tuning"``):
 * the controller response surface keeps r2 >= 0.8 over the surviving region;
 * racing spends <= 40% of the naive sweep budget and returns the same winner
   as the exhaustive grid sweep;
+* the joint-optimum case holds: on the tiered-SLA scenario the joint
+  (discipline x n_replicas) optimum differs from the config greedy
+  per-dimension search assembles, and scores strictly better — scoping
+  dimensions one at a time provably overpays;
 * tuner wall clock stays within ``--wall-mult`` (2x) of the baseline.
 
 Simulator-backend gate (``benchmark == "sim_perf"``):
@@ -73,6 +77,23 @@ Scoping-oracle gate (``benchmark == "scoping_oracle"``):
   segment, no costlier — while spending a fraction of the re-tune's
   simulations; numpy and jax agree on the held-out evaluation.
 
+Portfolio gate (``benchmark == "portfolio_tuning"``):
+
+* the 4-trace x >= 512-candidate evaluation round runs as one compiled
+  dispatch per candidate tile (exactly ``n_tiles`` dispatches, all warm on
+  the measured round, one cold after a cache flush) and beats the
+  sequential per-trace numpy path by >= 5x on per-trajectory throughput
+  (with the wall-clock grace floor);
+* robustness dominance: the portfolio winner's worst-trace score is no
+  worse than EVERY single-trace winner's worst-trace score, and no worse
+  than the baseline's beyond tolerance;
+* numpy and jax agree on the robust score bit-for-bit (delta 0) and on
+  the round winner;
+* the warm persistent-compile-cache rebuild registers disk hits and spends
+  measurably less cold-dispatch wall-clock than the cold build (unless the
+  cold build is already under the grace floor);
+* headline wall clock stays within ``--wall-mult`` of the baseline.
+
 Usage (CI runs exactly this):
 
     python tools/check_bench.py BENCH_fleet.json \\
@@ -85,6 +106,8 @@ Usage (CI runs exactly this):
         --baseline benchmarks/baselines/control.json
     python tools/check_bench.py BENCH_oracle.json \\
         --baseline benchmarks/baselines/oracle.json
+    python tools/check_bench.py BENCH_portfolio.json \\
+        --baseline benchmarks/baselines/portfolio.json
 
 After an intentional perf/cost change, refresh the baseline with
 ``--write-baseline`` and commit the result.
@@ -237,6 +260,27 @@ def compare_tuner(fresh: dict, base: dict, attain_tol: float,
         problems.append(
             f"tuner: wall clock regressed {bwall:.1f}s -> {fwall:.1f}s "
             f"(> {wall_mult:g}x baseline and > {WALL_FLOOR_S:g}s floor)")
+    jo = fresh.get("joint_optimum")
+    if jo is None:
+        problems.append("tuner: joint_optimum section missing — "
+                        "tune_controller.py should run the tiered-SLA "
+                        "greedy-vs-joint case")
+    else:
+        joint, greedy = jo.get("joint"), jo.get("greedy")
+        if not joint or not greedy:
+            problems.append(f"tuner: joint_optimum incomplete "
+                            f"(have {sorted(jo)})")
+        else:
+            if joint["params"] == greedy["params"]:
+                problems.append(
+                    "tuner: greedy per-dim search found the joint optimum "
+                    f"({joint['params']}) — the scenario no longer "
+                    "demonstrates cross-dimension coupling")
+            if not joint["score"] < greedy["score"]:
+                problems.append(
+                    "tuner: joint optimum no longer strictly beats the "
+                    f"greedy per-dim config (joint {joint['score']:.2f} vs "
+                    f"greedy {greedy['score']:.2f})")
     return problems
 
 
@@ -615,6 +659,149 @@ def _oracle_closed_loop_problems(fresh: dict) -> list:
     return problems
 
 
+PORTFOLIO_SCORE_TOL = 0.0       # robust-score agreement is exact: the trace
+#                                 reduction runs host-side on both backends
+PCACHE_FLOOR_S = 0.5            # grace floor: a cold build compiling for
+#                                 less than this can't show a measurable
+#                                 warm-cache saving above timing noise
+
+
+def _portfolio_dispatch_problems(head: dict) -> list:
+    """The one-dispatch-per-tile invariant: a >= 512-candidate x 4-trace
+    round is exactly ``n_tiles`` compiled dispatches — 1 cold + warm
+    repeats after a cache flush, all warm once compiled — never a
+    per-trace or per-candidate Python loop."""
+    problems = []
+    n_tiles = head.get("n_tiles")
+    cold = head.get("cold_round_dispatches") or []
+    warm = head.get("warm_round_dispatches") or []
+    if not n_tiles or not cold or not warm:
+        return [f"portfolio: dispatch accounting missing "
+                f"(have {sorted(head)})"]
+    if len(warm) != n_tiles or any(d["kind"] != "warm" for d in warm):
+        problems.append(
+            f"portfolio: measured round is not one warm dispatch per tile "
+            f"({len(warm)} dispatches for {n_tiles} tiles, kinds "
+            f"{[d['kind'] for d in warm]})")
+    n_cold = sum(1 for d in cold if d["kind"] == "cold")
+    if len(cold) != n_tiles or n_cold != 1:
+        problems.append(
+            f"portfolio: post-flush round should compile once and reuse "
+            f"({len(cold)} dispatches, {n_cold} cold, for {n_tiles} tiles)")
+    return problems
+
+
+def compare_portfolio(fresh: dict, base: dict, attain_tol: float,
+                      cost_tol: float, wall_mult: float) -> list:
+    """Regression strings for a portfolio-tuning benchmark (empty=green).
+
+    The speedup, dispatch-accounting, dominance, agreement and compile-cache
+    bars are invariants of the fresh run; the baseline pins the portfolio
+    winner's worst-trace score/attainment and the warm wall clock against
+    silent erosion."""
+    if fresh.get("error"):
+        return [f"portfolio: benchmark did not run ({fresh['error']})"]
+    problems = []
+    head = fresh.get("headline", {})
+    speedup, jax_s = head.get("speedup"), head.get("jax_warm_s")
+    if speedup is None or jax_s is None:
+        return [f"portfolio: headline missing (have {sorted(head)})"]
+    if speedup < MIN_SIM_SPEEDUP and jax_s > SIM_WALL_FLOOR_S:
+        problems.append(
+            f"portfolio: tiled compiled round only {speedup:.1f}x the "
+            f"sequential numpy path ({head.get('n_candidates')} cands x "
+            f"{head.get('n_traces')} traces x {head.get('n_seeds')} seeds) "
+            f"— bar {MIN_SIM_SPEEDUP}x (jax {jax_s:.3f}s > "
+            f"{SIM_WALL_FLOOR_S}s grace floor)")
+    problems += _portfolio_dispatch_problems(head)
+    sub_delta = head.get("subset_max_score_delta")
+    if sub_delta is None or not sub_delta <= PORTFOLIO_SCORE_TOL:
+        problems.append(
+            f"portfolio: numpy subset disagrees with the tiled round — max "
+            f"robust score delta {sub_delta} (bar {PORTFOLIO_SCORE_TOL})")
+
+    rob = fresh.get("robustness", {})
+    pw = rob.get("portfolio_winner", {})
+    singles = rob.get("single_trace_winners", [])
+    if not pw or not singles:
+        problems.append(f"portfolio: robustness section incomplete "
+                        f"(have {sorted(rob)})")
+    else:
+        if not rob.get("portfolio_dominates"):
+            worst = max(singles, key=lambda r: -r["worst_trace_score"])
+            problems.append(
+                "portfolio: the robustness headline broke — portfolio "
+                f"winner's worst-trace score ${pw.get('worst_trace_score'):.2f} "
+                "is beaten by the single-trace winner tuned on "
+                f"{worst['tuned_on']} (${worst['worst_trace_score']:.2f})")
+        bpw = base.get("robustness", {}).get("portfolio_winner", {})
+        if bpw.get("worst_trace_score") is not None:
+            floor = max(bpw["worst_trace_score"], 1e-9)
+            if pw["worst_trace_score"] > floor * (1.0 + cost_tol):
+                problems.append(
+                    f"portfolio: winner's worst-trace score rose "
+                    f"{bpw['worst_trace_score']:.2f} -> "
+                    f"{pw['worst_trace_score']:.2f} "
+                    f"(tol {cost_tol * 100:.0f}%)")
+        if bpw.get("worst_trace_attainment") is not None:
+            da = (bpw["worst_trace_attainment"]
+                  - pw.get("worst_trace_attainment", 0.0))
+            if da > attain_tol:
+                problems.append(
+                    f"portfolio: winner's worst-trace attainment dropped "
+                    f"{bpw['worst_trace_attainment']:.4f} -> "
+                    f"{pw.get('worst_trace_attainment'):.4f} "
+                    f"(tol {attain_tol})")
+
+    agree = fresh.get("agreement", {})
+    delta = agree.get("max_robust_score_delta")
+    if delta is None or not delta <= PORTFOLIO_SCORE_TOL:
+        problems.append(
+            f"portfolio: backends disagree on the robust score — max delta "
+            f"{delta} (bar {PORTFOLIO_SCORE_TOL}: the trace reduction is "
+            "host-side numpy on both paths)")
+    if not agree.get("same_winner"):
+        problems.append(
+            "portfolio: backends disagree on the round winner "
+            f"({agree.get('numpy_winner')} vs {agree.get('jax_winner')})")
+
+    cache = fresh.get("compile_cache", {})
+    coldb, warmb = cache.get("cold_build", {}), cache.get("warm_build", {})
+    if not coldb or not warmb:
+        problems.append(f"portfolio: compile_cache section incomplete "
+                        f"(have {sorted(cache)})")
+    else:
+        if not coldb.get("disk_misses", 0) >= 1:
+            problems.append(
+                "portfolio: cold build registered no persistent-cache disk "
+                "misses — the on-disk cache is not wired")
+        if not warmb.get("disk_hits", 0) >= 1:
+            problems.append(
+                "portfolio: warm rebuild registered no persistent-cache "
+                f"disk hits ({warmb.get('disk_misses', 0)} miss(es)) — "
+                "the rebuild recompiled from scratch")
+        cold_s = coldb.get("cold_dispatch_s", 0.0)
+        warm_s = warmb.get("cold_dispatch_s", 0.0)
+        if cold_s > PCACHE_FLOOR_S and not warm_s < cold_s:
+            problems.append(
+                f"portfolio: warm-cache rebuild not faster than the cold "
+                f"build ({warm_s:.2f}s vs {cold_s:.2f}s cold-dispatch "
+                f"wall; floor {PCACHE_FLOOR_S}s)")
+        if cache.get("max_score_delta") != 0.0:
+            problems.append(
+                "portfolio: cache-deserialized executables disagree with "
+                f"freshly compiled ones — max score delta "
+                f"{cache.get('max_score_delta')}")
+
+    bwall = base.get("headline", {}).get("jax_warm_s")
+    if bwall and jax_s > max(wall_mult * bwall, WALL_FLOOR_S):
+        problems.append(
+            f"portfolio: warm round wall clock regressed {bwall:.1f}s -> "
+            f"{jax_s:.1f}s (> {wall_mult:g}x baseline and > "
+            f"{WALL_FLOOR_S:g}s floor)")
+    return problems
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="fail when benchmark results regress vs baseline")
@@ -733,6 +920,33 @@ def main(argv=None) -> int:
               f"{cl.get('retune', {}).get('swap_bin')} with "
               f"{cl.get('oracle', {}).get('consult_sims')} vs "
               f"{cl.get('retune', {}).get('tune_sims')} sims; {agree_note}")
+        return 0
+
+    if fresh.get("benchmark") == "portfolio_tuning":
+        problems = compare_portfolio(fresh, base, args.attain_tol,
+                                     args.cost_tol, args.wall_mult)
+        if problems:
+            print(f"BENCH REGRESSION ({len(problems)} problem(s)):")
+            for p in problems:
+                print(f"  - {p}")
+            return 1
+        head = fresh["headline"]
+        pw = fresh["robustness"]["portfolio_winner"]
+        singles = fresh["robustness"]["single_trace_winners"]
+        cache = fresh["compile_cache"]
+        print(f"portfolio gate green: {head['n_candidates']} candidates x "
+              f"{head['n_traces']} traces x {head['n_seeds']} seeds in "
+              f"{head['n_tiles']} tiled dispatches at {head['speedup']:.1f}x "
+              f"the numpy path (bar {MIN_SIM_SPEEDUP}x), backends exact "
+              f"(robust score delta "
+              f"{fresh['agreement']['max_robust_score_delta']:.1e})")
+        print(f"  robustness: portfolio winner worst-trace "
+              f"${pw['worst_trace_score']:.2f} dominates "
+              f"{len(singles)} single-trace winners (best of those "
+              f"${min(r['worst_trace_score'] for r in singles):.2f}); "
+              f"compile cache: {cache['warm_build']['disk_hits']} disk "
+              f"hit(s) saved {cache['compile_seconds_saved']:.2f}s "
+              "compiling on the rebuild")
         return 0
 
     if fresh.get("benchmark") == "controller_tuning":
